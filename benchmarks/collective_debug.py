@@ -1,0 +1,117 @@
+"""Dump the largest collectives (trip-multiplied) for one dry-run cell.
+
+    PYTHONPATH=src python -m benchmarks.collective_debug --arch X --shape Y
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--top", type=int, default=12)
+    ap.add_argument("--variants", default="baseline")
+    args = ap.parse_args()
+
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    from repro.launch import hlo_analysis as H
+    from repro.launch.dryrun import run_cell
+    import repro.launch.dryrun as dr
+    import jax
+
+    # reuse run_cell's lowering path but keep the compiled text
+    from repro.configs import SHAPES, get_config
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.transformer import Model
+    from repro.parallel.sharding import make_sharder
+    from repro.train.optimizer import AdamW, cosine_schedule
+
+    cfg = get_config(args.arch)
+    from benchmarks.hillclimb import VARIANTS
+    for part in args.variants.split("+"):
+        if part != "baseline":
+            cfg = VARIANTS[part](cfg)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=False)
+    sharder = make_sharder(cfg, mesh)
+    model = Model(cfg, sharder)
+    with mesh:
+        if shape.kind == "train":
+            opt = AdamW(cosine_schedule(3e-4, 100, 10_000))
+            step = steps_lib.make_train_step(model, opt)
+            fn = jax.jit(step, donate_argnums=(0, 1))
+            argsx = (steps_lib.sds_params(model, sharder),
+                     steps_lib.sds_opt_state(model, sharder, opt),
+                     steps_lib.sds_batch(cfg, shape, sharder))
+        elif shape.kind == "prefill":
+            step = steps_lib.make_prefill_step(model)
+            fn = jax.jit(step, donate_argnums=(2,))
+            argsx = (steps_lib.sds_params(model, sharder),
+                     steps_lib.sds_batch(cfg, shape, sharder),
+                     steps_lib.sds_cache(model, sharder, shape.global_batch,
+                                         shape.seq_len))
+        else:
+            step = steps_lib.make_decode_step(model, cfg.is_encoder_decoder)
+            fn = jax.jit(step, donate_argnums=(2,))
+            argsx = (steps_lib.sds_params(model, sharder, cfg.dtype),
+                     steps_lib.sds_token(cfg, shape.global_batch, sharder),
+                     steps_lib.sds_cache(model, sharder, shape.global_batch,
+                                         shape.seq_len),
+                     steps_lib.sds_scalar(sharder))
+        compiled = fn.lower(*argsx).compile()
+    text = compiled.as_text()
+
+    comps = H._split_computations(text)
+    children = {c: [] for c in comps}
+    import re
+    for name, lines in comps.items():
+        for line in lines:
+            m = H._WHILE_RE.search(line)
+            if m:
+                children[name].append((m.group(2),
+                                       H._trip_count(comps.get(m.group(1), []))))
+    mult = {}
+
+    def visit(comp, m):
+        mult[comp] = mult.get(comp, 0) + m
+        for child, trips in children.get(comp, []):
+            visit(child, m * trips)
+
+    entry = next((c for c in comps if "main" in c), next(iter(comps)))
+    visit(entry, 1)
+
+    rows = []
+    for name, lines in comps.items():
+        m = mult.get(name, 0)
+        if not m:
+            continue
+        for kind, operand, wire in H._collectives_in(lines):
+            # find the raw line for context
+            rows.append((wire * m, kind, m, wire, name))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total wire: {total/1e9:.1f} GB across {len(rows)} distinct ops")
+    for wire_tot, kind, m, wire, comp in rows[:args.top]:
+        print(f"{wire_tot/1e9:9.2f} GB  {kind:18} ×{m:4d} trips "
+              f"({wire/1e6:9.1f} MB each)  in {comp[:60]}")
+    # print the heaviest individual instructions (by wire × trips)
+    print("\nheaviest collective instructions:")
+    inst = []
+    for name, lines in comps.items():
+        m = mult.get(name, 0)
+        if not m:
+            continue
+        for line in lines:
+            colls = H._collectives_in([line])
+            if colls:
+                inst.append((colls[0][2] * m, name, line))
+    inst.sort(reverse=True)
+    for wire_tot, name, line in inst[:10]:
+        res = line.split(" = ")[1][:150] if " = " in line else line[:150]
+        print(f"  {wire_tot/1e9:8.2f}GB [{name[:36]}] {res}")
+
+
+if __name__ == "__main__":
+    main()

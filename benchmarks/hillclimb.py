@@ -1,0 +1,205 @@
+"""§Perf hillclimb harness: lower one (arch × shape) cell under a series of
+config/sharding variants and report the three roofline terms per variant.
+
+Each named variant is a function ModelConfig → ModelConfig; the harness
+recompiles, re-analyses (scan-aware collective parsing + analytic models)
+and prints the before/after table that EXPERIMENTS.md §Perf records.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch granite-moe-3b-a800m \
+        --shape train_4k --variants baseline,zero1 [--save]
+"""
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+
+# ---------------------------------------------------------------------------
+# Variants (applied on top of the arch config; composable with '+')
+# ---------------------------------------------------------------------------
+
+def v_baseline(cfg):
+    return cfg
+
+
+def v_zero1(cfg):
+    """ZeRO-1: params replicated over data ("embed"→None); only optimizer
+    moments stay data-sharded (handled in sds via moment rules)."""
+    return dataclasses.replace(
+        cfg, sharding_overrides=cfg.sharding_overrides + (("embed", None),))
+
+
+def v_no_remat(cfg):
+    return dataclasses.replace(cfg, remat=False)
+
+
+def v_group8(cfg):
+    return dataclasses.replace(cfg, moe_group_rows=8)
+
+
+def v_group16(cfg):
+    return dataclasses.replace(cfg, moe_group_rows=16)
+
+
+def v_seq_shard_attn(cfg):
+    """Shard long-sequence activations over the model axis (SP)."""
+    return dataclasses.replace(
+        cfg, sharding_overrides=cfg.sharding_overrides + (("seq", "model"),))
+
+
+def v_gspmd(cfg):
+    """The pre-iteration MoE path (pure GSPMD einsum dispatch)."""
+    return dataclasses.replace(cfg, moe_impl="gspmd")
+
+
+def v_capshard(cfg):
+    """Shard expert-capacity slots over the model axis; replicate the (small)
+    expert FFN weights — turns the per-layer MoE psum from (b,E,cap,d) into
+    (b,s,d)."""
+    return dataclasses.replace(
+        cfg, sharding_overrides=cfg.sharding_overrides + (
+            ("expert_ffn", None), ("moe_cap", "model")))
+
+
+def v_cap05(cfg):
+    return dataclasses.replace(cfg, moe_capacity_factor=0.5)
+
+
+def v_block1k(cfg):
+    return dataclasses.replace(cfg, attn_block_q=1024, attn_block_k=1024)
+
+
+def v_block2k(cfg):
+    return dataclasses.replace(cfg, attn_block_q=2048, attn_block_k=2048)
+
+
+VARIANTS = {
+    "baseline": v_baseline,
+    "zero1": v_zero1,
+    "no_remat": v_no_remat,
+    "group8": v_group8,
+    "group16": v_group16,
+    "seqshard": v_seq_shard_attn,
+    "gspmd": v_gspmd,
+    "capshard": v_capshard,
+    "cap05": v_cap05,
+    "block1k": v_block1k,
+    "block2k": v_block2k,
+}
+
+
+def run_variant(arch: str, shape_name: str, cfg) -> dict:
+    import jax
+    from repro.configs import SHAPES
+    from repro.launch import steps as steps_lib
+    from repro.launch.hlo_analysis import analyze_compiled
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.transformer import Model
+    from repro.parallel.sharding import make_sharder
+    from repro.perf.analytic import bytes_model, flops_model, \
+        model_flops_reference
+    from repro.train.optimizer import AdamW, cosine_schedule
+
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    sharder = make_sharder(cfg, mesh)
+    model = Model(cfg, sharder)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt = AdamW(cosine_schedule(3e-4, 100, 10_000))
+            fn = jax.jit(steps_lib.make_train_step(model, opt),
+                         donate_argnums=(0, 1))
+            args = (steps_lib.sds_params(model, sharder),
+                    steps_lib.sds_opt_state(model, sharder, opt),
+                    steps_lib.sds_batch(cfg, shape, sharder))
+        elif shape.kind == "prefill":
+            fn = jax.jit(steps_lib.make_prefill_step(model),
+                         donate_argnums=(2,))
+            args = (steps_lib.sds_params(model, sharder),
+                    steps_lib.sds_batch(cfg, shape, sharder),
+                    steps_lib.sds_cache(model, sharder, shape.global_batch,
+                                        shape.seq_len))
+        else:
+            fn = jax.jit(steps_lib.make_decode_step(model,
+                                                    cfg.is_encoder_decoder),
+                         donate_argnums=(2,))
+            args = (steps_lib.sds_params(model, sharder, cfg.dtype),
+                    steps_lib.sds_token(cfg, shape.global_batch, sharder),
+                    steps_lib.sds_cache(model, sharder, shape.global_batch,
+                                        shape.seq_len),
+                    steps_lib.sds_scalar(sharder))
+        compiled = fn.lower(*args).compile()
+    info = analyze_compiled(compiled)
+    flops = flops_model(cfg, shape)["total_flops"]
+    hbm = bytes_model(cfg, shape)["total_bytes"]
+    coll = info.get("collectives", {})
+    wire = coll.get("wire_bytes_adj", coll.get("wire_bytes", 0.0))
+    t_comp = flops / (CHIPS * PEAK_FLOPS)
+    t_mem = hbm / (CHIPS * HBM_BW)
+    t_coll = wire / ICI_BW
+    bound = max(t_comp, t_mem, t_coll)
+    ref = model_flops_reference(cfg, shape)
+    return {
+        "arch": arch, "shape": shape_name,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": max(("compute", t_comp), ("memory", t_mem),
+                        ("collective", t_coll), key=lambda kv: kv[1])[0],
+        "step_time_lb_s": bound,
+        "achievable_mfu": (ref / (CHIPS * PEAK_FLOPS)) / bound if bound else 0,
+        "flops_vs_ref": flops / ref if ref else 0.0,
+        "wire_gb": wire / 1e9,
+        "temp_gb": info.get("temp_size_in_bytes", 0) / 1e9,
+        "compile_s": round(time.time() - t0, 1),
+        "wire_gb_raw": info.get("collectives", {}).get("wire_bytes", 0.0) / 1e9,
+        "collective_by_op": {k: round(v["wire_bytes_adj"] / 1e9, 2)
+                             for k, v in info.get("collectives", {})
+                             .get("by_op", {}).items() if v["count"]},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--save", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+
+    results = {}
+    for vname in args.variants.split(","):
+        cfg = get_config(args.arch)
+        for part in vname.split("+"):
+            if part != "baseline":
+                cfg = VARIANTS[part](cfg)
+        rec = run_variant(args.arch, args.shape, cfg)
+        results[vname] = rec
+        print(f"[{vname:>24}] comp {rec['t_compute_s']:8.3f}s  "
+              f"mem {rec['t_memory_s']:7.3f}s  coll {rec['t_collective_s']:8.3f}s  "
+              f"({rec['dominant']}; mfu@bound {rec['achievable_mfu']:.3f}; "
+              f"wire {rec['wire_gb']:.0f}GB; temp {rec['temp_gb']:.0f}GB; "
+              f"compile {rec['compile_s']}s)", flush=True)
+        print(f"{'':26} by_op: {rec['collective_by_op']}")
+    if args.save:
+        out = os.path.join(os.path.dirname(__file__), "artifacts",
+                           f"hillclimb_{args.arch}_{args.shape}.json")
+        existing = {}
+        if os.path.exists(out):
+            existing = json.load(open(out))
+        existing.update(results)
+        json.dump(existing, open(out, "w"), indent=2)
+        print(f"saved -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Paper Figs. 7a / 8a / 8b: wall-clock of BF vs ITM-analogue (rank) vs SBM
+as functions of algorithm, N, and the overlapping degree α.
+
+Methodology follows the paper §5: N extents (half subscriptions), identical
+length l = αL/N uniformly placed on L = 1e6; measurements average multiple
+runs after a warmup (jit) run; matching only *counts* (as the paper does).
+Scaled to CPU-feasible N (the paper's asymptotics are the claim under test:
+SBM polylog growth in N, α-independence, ≫BF).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (bf_count, make_uniform_workload, rank_count,
+                        sbm_count)
+from repro.core.sweep import sequential_sbm_count_numpy
+
+REPS = 5
+
+
+def _time(fn: Callable, *args, reps: int = REPS) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)       # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def wct_vs_algorithm(rows: List[str]) -> None:
+    """Fig. 7a analogue (N scaled to CPU): BF vs rank(ITM) vs SBM, α=100."""
+    n = 100_000
+    subs, upds = make_uniform_workload(jax.random.PRNGKey(0), n // 2, n // 2,
+                                       alpha=100.0)
+    k_ref = int(rank_count(subs, upds))
+    for name, fn in [
+        ("matching_bf_n1e5_a100", lambda: bf_count(subs, upds, block=2048)),
+        ("matching_rank_n1e5_a100", lambda: rank_count(subs, upds)),
+        ("matching_sbm_n1e5_a100", lambda: sbm_count(subs, upds,
+                                                     num_segments=16)),
+    ]:
+        assert int(fn()) == k_ref
+        dt = _time(fn)
+        rows.append(f"{name},{dt*1e6:.1f},K={k_ref}")
+    # sequential SBM (Algorithm 4, host) — the serial baseline
+    t0 = time.perf_counter()
+    k = sequential_sbm_count_numpy(subs, upds)
+    dt = time.perf_counter() - t0
+    assert k == k_ref
+    rows.append(f"matching_sbm_sequential_n1e5_a100,{dt*1e6:.1f},K={k}")
+
+
+def wct_vs_n(rows: List[str]) -> None:
+    """Fig. 8a analogue: SBM & rank vs N (polylog growth claim)."""
+    for n in (10_000, 100_000, 1_000_000):
+        subs, upds = make_uniform_workload(jax.random.PRNGKey(1), n // 2,
+                                           n // 2, alpha=100.0)
+        dt_sbm = _time(lambda: sbm_count(subs, upds, num_segments=16))
+        dt_rank = _time(lambda: rank_count(subs, upds))
+        rows.append(f"matching_sbm_n{n},{dt_sbm*1e6:.1f},")
+        rows.append(f"matching_rank_n{n},{dt_rank*1e6:.1f},")
+
+
+def wct_vs_alpha(rows: List[str]) -> None:
+    """Fig. 8b analogue: SBM WCT vs α (α-independence claim; rank too)."""
+    n = 1_000_000
+    for alpha in (0.01, 1.0, 100.0):
+        subs, upds = make_uniform_workload(jax.random.PRNGKey(2), n // 2,
+                                           n // 2, alpha=alpha)
+        dt_sbm = _time(lambda: sbm_count(subs, upds, num_segments=16))
+        dt_rank = _time(lambda: rank_count(subs, upds))
+        a = str(alpha).replace(".", "p")
+        rows.append(f"matching_sbm_a{a},{dt_sbm*1e6:.1f},")
+        rows.append(f"matching_rank_a{a},{dt_rank*1e6:.1f},")
+
+
+def scan_impl_sweep(rows: List[str]) -> None:
+    """Beyond-paper: two-level (Fig. 5) vs Blelloch vs monolithic scan."""
+    n = 1_000_000
+    subs, upds = make_uniform_workload(jax.random.PRNGKey(3), n // 2, n // 2,
+                                       alpha=100.0)
+    for impl in ("two_level", "blelloch", "xla"):
+        dt = _time(lambda impl=impl: sbm_count(subs, upds, num_segments=16,
+                                               scan_impl=impl))
+        rows.append(f"matching_sbm_scan_{impl}_n1e6,{dt*1e6:.1f},")
+
+
+def run(rows: List[str]) -> None:
+    wct_vs_algorithm(rows)
+    wct_vs_n(rows)
+    wct_vs_alpha(rows)
+    scan_impl_sweep(rows)

@@ -1,0 +1,55 @@
+"""Paper Fig. 11: memory use of BF / rank(ITM) / SBM vs N and vs P.
+
+The paper measures peak RSS; here we report (a) the exact live-buffer bytes
+of each algorithm's data structures (endpoint records, indicator streams,
+per-segment partials — analytically, they are what they are), and (b) the
+process-level peak RSS around each run, which includes allocator slack.
+Claim under test: SBM memory grows linearly in N and only the (tiny)
+per-segment partials grow with P.
+"""
+from __future__ import annotations
+
+import resource
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bf_count, make_uniform_workload, rank_count, sbm_count
+
+
+def _rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def sbm_live_bytes(n: int, p: int) -> int:
+    """Exact live buffers of the counting sweep."""
+    endpoints = 2 * n
+    values = endpoints * 4                  # f32 coords
+    flags = endpoints * (1 + 1 + 4)         # is_upper, is_sub, owner
+    deltas = 4 * endpoints * 4              # four int32 indicator streams
+    partials = p * 4 * 4                    # per-segment sums (Fig. 5 master)
+    cumsums = 4 * endpoints * 4
+    return values + flags + deltas + partials + cumsums
+
+
+def run(rows: List[str]) -> None:
+    for n in (10_000, 100_000, 1_000_000):
+        subs, upds = make_uniform_workload(jax.random.PRNGKey(0), n // 2,
+                                           n // 2, alpha=100.0)
+        before = _rss_mb()
+        jax.block_until_ready(sbm_count(subs, upds, num_segments=16))
+        after = _rss_mb()
+        live = sbm_live_bytes(n, 16)
+        rows.append(f"memory_sbm_n{n},{live/1e6:.2f},"
+                    f"rss_delta_mb={max(after-before, 0):.1f}")
+    # linearity check: bytes(1e6)/bytes(1e4) ≈ 100
+    r = sbm_live_bytes(1_000_000, 16) / sbm_live_bytes(10_000, 16)
+    rows.append(f"memory_sbm_linearity_1e6_over_1e4,{r:.1f},ideal=100")
+    # P-dependence: only the partials grow (paper: threads add arrays)
+    for p in (1, 16, 256):
+        rows.append(f"memory_sbm_p{p}_n1e6,{sbm_live_bytes(1_000_000, p)/1e6:.3f},")
+    # BF / rank live buffers for contrast
+    rows.append(f"memory_bf_n1e6,{(2*1_000_000*4)/1e6:.2f},inputs_only")
+    rows.append(f"memory_rank_n1e6,{(4*1_000_000*4)/1e6:.2f},sorted_copies")

@@ -1,0 +1,48 @@
+"""Sort-based MoE dispatch microbenchmark (the paper's engine inside the
+model): dispatch schedule construction + full MoE layer step, plus the
+dispatch statistics that drive the EP/capacity hillclimb."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.models import moe as moe_lib
+from repro.models.api import init_params
+from repro.parallel.sharding import Sharder
+
+
+def _time(fn, reps=3):
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+def run(rows: List[str]) -> None:
+    cfg = dataclasses.replace(reduce_config(get_config("granite-moe-3b-a800m")),
+                              d_model=256, d_ff=256, num_experts=16,
+                              num_experts_per_token=4)
+    params = init_params(jax.random.PRNGKey(0), moe_lib.moe_defs(cfg),
+                         jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 512, cfg.d_model))
+    sh = Sharder()
+
+    layer = jax.jit(lambda p, x: moe_lib.moe_layer(p, x, cfg, sh)[0])
+    dt = _time(lambda: layer(params, x))
+    rows.append(f"moe_layer_b4_s512_e16_k4,{dt*1e6:.1f},")
+
+    ids = jax.random.randint(jax.random.PRNGKey(2), (2048,), 0,
+                             cfg.num_experts)
+    disp = jax.jit(lambda i: moe_lib.sort_based_dispatch(
+        i, 256, cfg.num_experts)[0])
+    dt = _time(lambda: disp(ids))
+    rows.append(f"moe_sort_dispatch_r2048_e16,{dt*1e6:.1f},")
+
+    _, aux = jax.jit(lambda p, x: moe_lib.moe_layer(p, x, cfg, sh))(params, x)
+    rows.append(f"moe_drop_fraction_cf1.25,{float(aux['moe_drop_fraction']):.4f},")

@@ -1,0 +1,101 @@
+"""§Roofline: three-term roofline per (arch × shape) from dry-run artifacts.
+
+    compute term    = FLOPs / (chips × peak)
+    memory term     = HBM bytes / (chips × HBM bandwidth)
+    collective term = per-chip wire bytes / link bandwidth
+                      (≡ global collective bytes / (chips × link_bw))
+
+FLOPs/bytes are the *analytic* models (validated against cost_analysis on
+unrolled configs — tests/test_perf_analytic.py; raw HLO numbers undercount
+scan bodies and are recorded alongside).  Collective bytes are exact,
+parsed from the per-device SPMD HLO with while-trip multiplication.
+
+Hardware constants (TPU v5e-class, per brief): 197 TFLOP/s bf16, 819 GB/s
+HBM, 50 GB/s/link ICI.  Single-pod (16×16 = 256 chips) table only.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+CHIPS = 256
+
+ARTIFACTS = Path(__file__).parent / "artifacts_final"
+BASELINE_ARTIFACTS = Path(__file__).parent / "artifacts"
+
+
+def load_cells(mesh: str = "16x16"):
+    cells = []
+    for p in sorted(ARTIFACTS.glob("dryrun_single_*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("mesh") != mesh and "skipped" not in rec:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def roofline_row(rec: dict) -> dict:
+    if "skipped" in rec or "error" in rec:
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "status": rec.get("skipped") or "ERROR"}
+    # recompute analytic terms live (model fixes shouldn't need recompiles);
+    # collectives/memory_analysis come from the compiled artifact.
+    from repro.configs import SHAPES, get_config
+    from repro.perf.analytic import bytes_model, flops_model
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    rec = dict(rec)
+    rec["analytic"] = flops_model(cfg, shape)
+    rec["analytic_bytes"] = bytes_model(cfg, shape)
+    flops = rec["analytic"]["total_flops"]
+    hbm_bytes = rec["analytic_bytes"]["total_bytes"]
+    coll = rec.get("collectives", {})
+    wire = coll.get("wire_bytes_adj", coll.get("wire_bytes", 0.0))
+    t_comp = flops / (CHIPS * PEAK_FLOPS)
+    t_mem = hbm_bytes / (CHIPS * HBM_BW)
+    t_coll = wire / ICI_BW            # wire bytes are already per-chip
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    bound = max(t_comp, t_mem, t_coll)
+    ref = rec["model_flops_ref"]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "step_time_lb_s": bound,
+        "model_flops": ref,
+        "hlo_vs_model_ratio": flops / ref if ref else float("nan"),
+        "roofline_fraction": t_comp / bound if bound else 0.0,
+        "achievable_mfu": (ref / (6 if rec["kind"] == "train" else 2) *
+                           (6 if rec["kind"] == "train" else 2))
+                          / (CHIPS * PEAK_FLOPS) / bound if bound else 0.0,
+        "hlo_flops_raw": rec.get("cost", {}).get("flops", 0.0),
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def main() -> None:
+    rows = [roofline_row(r) for r in load_cells()]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = (f"{'arch':24} {'shape':12} {'t_comp':>9} {'t_mem':>9} "
+           f"{'t_coll':>9} {'dominant':>10} {'MFU@bound':>9} {'flops/6ND':>9}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:24} {r['shape']:12} SKIP: {r['status']}")
+            continue
+        print(f"{r['arch']:24} {r['shape']:12} "
+              f"{r['t_compute_s']:9.4f} {r['t_memory_s']:9.4f} "
+              f"{r['t_collective_s']:9.4f} {r['dominant']:>10} "
+              f"{r['achievable_mfu']:9.3f} {r['hlo_vs_model_ratio']:9.2f}")
+    out = ARTIFACTS / "roofline.json"
+    out.write_text(json.dumps(rows, indent=2))
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

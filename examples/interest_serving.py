@@ -1,0 +1,62 @@
+"""Serving with interest-managed attention: batched requests through the
+continuous-batching engine, plus a look inside the DDM block schedule that
+prunes attention for long contexts.
+
+    PYTHONPATH=src python examples/interest_serving.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.kernels.ops import build_block_structure
+from repro.models import Model
+from repro.serve.engine import Request, ServeEngine
+
+
+def show_block_schedule() -> None:
+    print("== DDM interest matching → attention block schedule ==")
+    s, w, blk = 8192, 1024, 512
+    kv_index, kv_count, bm = build_block_structure(
+        s, s, block_q=blk, block_k=blk, causal=True, window=w,
+        num_global_blocks=1)
+    dense = (s // blk) * (s // blk + 1) // 2
+    print(f"seq {s}, window {w}, block {blk}: "
+          f"{int(bm.sum())}/{dense} causal blocks kept "
+          f"({int(bm.sum())/dense:.1%}) — per-q-block kv lists:")
+    for i in (0, 7, 15):
+        idx = kv_index[i, :kv_count[i]]
+        print(f"  q-block {i:3d} -> kv blocks {list(idx)}")
+
+
+def serve_batch() -> None:
+    print("\n== batched serving (gemma2-family reduced: local+global) ==")
+    cfg = reduce_config(get_config("gemma2-2b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, num_slots=4, max_len=128)
+    rng = np.random.RandomState(0)
+    n_req = 10
+    for rid in range(n_req):
+        plen = rng.choice([16, 16, 32])
+        eng.submit(Request(rid, rng.randint(1, cfg.vocab_size,
+                                            size=plen).tolist(),
+                           max_new_tokens=8))
+    results = eng.run()
+    for rid in sorted(results):
+        r = results[rid]
+        print(f"  req {rid}: prompt {r.prompt_len:3d} tokens -> "
+              f"generated {r.tokens}")
+    assert len(results) == n_req
+    print("all requests served")
+
+
+def main() -> None:
+    show_block_schedule()
+    serve_batch()
+    print("\nOK")
+
+
+if __name__ == "__main__":
+    main()

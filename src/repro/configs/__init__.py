@@ -1,0 +1,176 @@
+"""Architecture & shape registry.
+
+Ten assigned architectures (public-literature configs) + the paper's own DDM
+workload config.  Every arch is selectable via ``--arch <id>`` in the
+launchers; ``reduce_config`` derives the CPU-smoke-test variant (same
+family/pattern/structure, tiny dims); ``input_specs``/``make_batch`` build
+the per-shape inputs (ShapeDtypeStructs for dry-runs, concrete arrays for
+smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import LayerSpec, ModelConfig
+
+ARCH_IDS = (
+    "granite-moe-3b-a800m",
+    "grok-1-314b",
+    "gemma2-2b",
+    "mistral-nemo-12b",
+    "smollm-360m",
+    "minitron-4b",
+    "phi-3-vision-4.2b",
+    "seamless-m4t-medium",
+    "jamba-1.5-large-398b",
+    "mamba2-2.7b",
+)
+
+_MODULES = {
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "grok-1-314b": "grok_1_314b",
+    "gemma2-2b": "gemma2_2b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "smollm-360m": "smollm_360m",
+    "minitron-4b": "minitron_4b",
+    "phi-3-vision-4.2b": "phi3_vision_4b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "jamba-1.5-large-398b": "jamba_1p5_large",
+    "mamba2-2.7b": "mamba2_2p7b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choices: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned input-shape set; seq_len × global_batch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeDef] = {
+    "train_4k": ShapeDef("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeDef("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeDef("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeDef("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic sequence mixing: only the SSM and the hybrid
+# arch qualify (jamba's 9 attention layers are O(S) per decoded token with a
+# sequence-sharded cache).  The 8 pure full-attention archs skip it — see
+# DESIGN.md §5.
+_LONG_OK = {"mamba2-2.7b", "jamba-1.5-large-398b"}
+
+
+def shape_applicable(arch: str, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and arch not in _LONG_OK:
+        return False, "quadratic full attention at 512k ctx (DESIGN.md §5)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Reduced configs for CPU smoke tests
+# ---------------------------------------------------------------------------
+
+def reduce_config(cfg: ModelConfig) -> ModelConfig:
+    """Same family/pattern, tiny dims — used by per-arch smoke tests."""
+    g = max(cfg.num_heads // max(cfg.num_kv_heads, 1), 1)
+    kv = 1 if cfg.num_kv_heads == 1 else 2
+    reps = 2 if len(cfg.pattern) <= 2 else 1
+    enc_layers = 0
+    if cfg.is_encoder_decoder:
+        enc_layers = len(cfg.encoder_pattern) * 2
+    return dataclasses.replace(
+        cfg,
+        num_layers=len(cfg.pattern) * reps,
+        d_model=64,
+        num_heads=g * kv,
+        num_kv_heads=kv,
+        head_dim=16,
+        d_ff=96 if cfg.d_ff else 0,
+        vocab_size=515,           # odd on purpose: exercises vocab padding
+        window=32 if cfg.window else None,
+        num_experts=4 if cfg.num_experts else 0,
+        num_experts_per_token=min(cfg.num_experts_per_token, 2),
+        # drop-free at smoke-test scale: the decode==forward contract holds
+        # exactly only when the capacity drop sets match
+        moe_capacity_factor=8.0,
+        ssm_state=16 if cfg.ssm_state else 0,
+        mamba_head_dim=8,
+        num_encoder_layers=enc_layers,
+        num_prefix_tokens=4 if cfg.frontend else 0,
+        dtype=jnp.float32,
+        param_dtype=jnp.float32,
+        remat=False,
+        attn_block_q=32,
+        attn_block_k=32,
+        vocab_pad_multiple=64,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Inputs: specs for dry-runs, concrete batches for smoke tests/examples
+# ---------------------------------------------------------------------------
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeDef) -> Dict[str, tuple]:
+    """(shape, dtype) map for one training/prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, tuple] = {}
+    s_text = s
+    if cfg.frontend == "vision":
+        s_text = s - cfg.num_prefix_tokens
+        out["prefix_embeds"] = ((b, cfg.num_prefix_tokens, cfg.d_model),
+                                jnp.bfloat16 if cfg.dtype == jnp.bfloat16
+                                else jnp.float32)
+    if cfg.frontend == "audio":
+        out["frame_embeds"] = ((b, s, cfg.d_model),
+                               jnp.bfloat16 if cfg.dtype == jnp.bfloat16
+                               else jnp.float32)
+    out["tokens"] = ((b, s_text), jnp.int32)
+    if shape.kind == "train":
+        total = s if cfg.frontend != "vision" else s
+        out["labels"] = ((b, total), jnp.int32)
+    return out
+
+
+def make_batch(rng: jax.Array, cfg: ModelConfig, shape: ShapeDef):
+    """Concrete synthetic batch (smoke tests, examples)."""
+    shapes = batch_shapes(cfg, shape)
+    batch = {}
+    for name, (shp, dt) in shapes.items():
+        key = jax.random.fold_in(rng, abs(hash(name)) % (2 ** 31))
+        if dt == jnp.int32:
+            batch[name] = jax.random.randint(key, shp, 0, cfg.vocab_size,
+                                             dtype=jnp.int32)
+        else:
+            batch[name] = jax.random.normal(key, shp, jnp.float32).astype(dt)
+    if "labels" in batch and cfg.frontend == "vision":
+        # no loss on the image prefix
+        lbl = batch["labels"]
+        prefix = jnp.full((lbl.shape[0], cfg.num_prefix_tokens), -1, jnp.int32)
+        batch["labels"] = jnp.concatenate(
+            [prefix, lbl[:, cfg.num_prefix_tokens:]], axis=1)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeDef):
+    """ShapeDtypeStruct stand-ins (no allocation) for the dry-run."""
+    return {name: jax.ShapeDtypeStruct(shp, dt)
+            for name, (shp, dt) in batch_shapes(cfg, shape).items()}

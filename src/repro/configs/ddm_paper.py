@@ -1,0 +1,21 @@
+"""The paper's own experimental configuration (§5): DDM workloads.
+
+N extents (half subscriptions, half updates) of identical length
+l = alpha * L / N placed uniformly on a segment of length L = 1e6;
+alpha ∈ {0.01, 1, 100}.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DDMWorkloadConfig:
+    n_extents: int = 1_000_000
+    alpha: float = 100.0
+    length: float = 1.0e6
+    dims: int = 1
+    num_segments: int = 16      # P — sweep segments / devices
+
+
+ALPHAS = (0.01, 1.0, 100.0)
+SIZES = (10_000, 100_000, 1_000_000)
+CONFIG = DDMWorkloadConfig()

@@ -1,0 +1,24 @@
+"""granite-moe-3b-a800m — IBM Granite 3.0 3B-A800M MoE.
+
+32L d_model=1536 24H (GQA kv=8, head_dim=64) expert d_ff=512, vocab=49155,
+40 experts top-8.  [hf:ibm-granite/granite-3.0-3b-a800m-base; hf]
+"""
+from repro.models.api import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49155,
+    pattern=(LayerSpec("attn", "moe"),),
+    num_experts=40,
+    moe_group_rows=8,   # decode dispatch groups (guarded by mesh divisibility)
+    num_experts_per_token=8,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,68 @@
+"""repro.core — Parallel Sort-Based Matching (Marzolla & D'Angelo, DS-RT'17)
+as a composable JAX module, plus the baselines the paper compares against.
+
+Public surface:
+  Extents, make_uniform_workload           — containers & paper workloads
+  sbm_count, sbm_count_sharded             — the paper's parallel SBM
+  sequential_sbm_count_numpy               — Algorithm 4 (serial baseline)
+  rank_count, per_sub_match_counts         — ITM's TPU-native analogue
+  bf_count, bf_count_sharded               — brute force (Algorithm 2)
+  grid_count                               — grid-based matching (§3.2)
+  enumerate_matches, match_matrix, ...     — pair/structure reporting
+  DDMService                               — HLA-style service facade
+"""
+from repro.core.intervals import (
+    Extents,
+    intersect_1d,
+    intersect_ddim,
+    make_uniform_workload,
+    make_clustered_workload,
+    brute_force_count_numpy,
+    brute_force_pairs_numpy,
+)
+from repro.core.sweep import (
+    EndpointStream,
+    encode_endpoints,
+    sbm_count,
+    sbm_count_sharded,
+    sbm_active_profile,
+    active_sets_at_segment_starts,
+    sequential_sbm_count_numpy,
+    sequential_sbm_pairs_numpy,
+)
+from repro.core.rank import (
+    rank_count,
+    rank_count_sharded,
+    per_sub_match_counts,
+    per_upd_match_counts,
+)
+from repro.core.brute_force import bf_count, bf_count_sharded
+from repro.core.grid import grid_count
+from repro.core.enumerate import (
+    enumerate_matches,
+    enumerate_matches_ddim,
+    enumerate_matches_sweep_numpy,
+)
+from repro.core.matrix import (
+    match_matrix,
+    match_matrix_ddim,
+    row_index_lists,
+    block_extents_for_sequence,
+    block_mask_from_extents,
+    document_extents,
+)
+from repro.core.service import DDMService
+
+__all__ = [
+    "Extents", "intersect_1d", "intersect_ddim", "make_uniform_workload",
+    "make_clustered_workload", "brute_force_count_numpy", "brute_force_pairs_numpy",
+    "EndpointStream", "encode_endpoints", "sbm_count", "sbm_count_sharded",
+    "sbm_active_profile", "active_sets_at_segment_starts",
+    "sequential_sbm_count_numpy", "sequential_sbm_pairs_numpy",
+    "rank_count", "rank_count_sharded", "per_sub_match_counts",
+    "per_upd_match_counts", "bf_count", "bf_count_sharded", "grid_count",
+    "enumerate_matches", "enumerate_matches_ddim", "enumerate_matches_sweep_numpy",
+    "match_matrix", "match_matrix_ddim", "row_index_lists",
+    "block_extents_for_sequence", "block_mask_from_extents", "document_extents",
+    "DDMService",
+]

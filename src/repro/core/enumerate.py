@@ -1,0 +1,91 @@
+"""Pair enumeration — the O(K) emission phase with TPU-legal shapes.
+
+TPUs cannot append to a dynamically sized list (the paper's ``L ← L ∪ {..}``
+under an atomic).  The standard adaptation is count → prefix offsets →
+scatter: a first pass sizes the output, a second writes each pair to its
+precomputed slot.  Output buffers are padded to a static ``max_pairs``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.intervals import Extents, intersect_1d
+
+
+@functools.partial(jax.jit, static_argnames=("max_pairs", "block"))
+def enumerate_matches(subs: Extents, upds: Extents, *, max_pairs: int,
+                      block: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """All matching (i, j) pairs, padded to ``max_pairs`` with (-1, -1).
+
+    Blocked all-pairs test + stream compaction: within each subscription
+    block the match mask is compacted with a prefix sum; a scan carries the
+    global write pointer across blocks (deterministic order: by (i, j)).
+    Returns (pairs (max_pairs, 2) int32, count).  Pairs beyond ``max_pairs``
+    are dropped but still counted — callers check ``count <= max_pairs``.
+    """
+    n = subs.lo.shape[0]
+    pad = (-n) % block
+    s_lo = jnp.pad(subs.lo, (0, pad), constant_values=jnp.inf).reshape(-1, block)
+    s_hi = jnp.pad(subs.hi, (0, pad), constant_values=-jnp.inf).reshape(-1, block)
+    n_blocks = s_lo.shape[0]
+    base_i = jnp.arange(n_blocks, dtype=jnp.int32) * block
+
+    out = jnp.full((max_pairs, 2), -1, jnp.int32)
+
+    def body(carry, blk):
+        write_ptr, out = carry
+        b_lo, b_hi, b_base = blk
+        mask = intersect_1d(b_lo[:, None], b_hi[:, None],
+                            upds.lo[None, :], upds.hi[None, :])
+        flat = mask.reshape(-1)
+        local_pos = jnp.cumsum(flat.astype(jnp.int32)) - 1
+        dest = jnp.where(flat, write_ptr + local_pos, max_pairs)  # drop slot
+        ii = (b_base + jnp.arange(block, dtype=jnp.int32))[:, None]
+        jj = jnp.arange(upds.lo.shape[0], dtype=jnp.int32)[None, :]
+        pairs = jnp.stack(jnp.broadcast_arrays(ii, jj), axis=-1).reshape(-1, 2)
+        out = out.at[jnp.minimum(dest, max_pairs), :].set(
+            jnp.where(flat[:, None], pairs, -1), mode="drop")
+        return (write_ptr + jnp.sum(flat, dtype=jnp.int32), out), None
+
+    (count, out), _ = lax.scan(body, (jnp.int32(0), out), (s_lo, s_hi, base_i))
+    return out, count
+
+
+def enumerate_matches_sweep_numpy(subs: Extents, upds: Extents) -> np.ndarray:
+    """Host-side O(N log N + K) enumeration via the sequential sweep.
+
+    Used by the DDM service for large instances where the blocked all-pairs
+    pass would be wasteful; matches :func:`enumerate_matches` as a set.
+    """
+    from repro.core.sweep import sequential_sbm_pairs_numpy
+    pairs = sorted(sequential_sbm_pairs_numpy(subs, upds))
+    if not pairs:
+        return np.zeros((0, 2), np.int32)
+    return np.asarray(pairs, np.int32)
+
+
+def enumerate_matches_ddim(subs: Extents, upds: Extents, *, max_pairs: int,
+                           block: int = 256):
+    """d-dimensional enumeration: dim-0 candidates filtered by dims 1..d-1
+    (paper §3: d-rectangles overlap iff every projection overlaps)."""
+    if subs.ndim_space == 1:
+        return enumerate_matches(subs, upds, max_pairs=max_pairs, block=block)
+    pairs, count = enumerate_matches(subs.dim(0), upds.dim(0),
+                                     max_pairs=max_pairs, block=block)
+    valid = pairs[:, 0] >= 0
+    i = jnp.maximum(pairs[:, 0], 0)
+    j = jnp.maximum(pairs[:, 1], 0)
+    keep = valid
+    for d in range(1, subs.ndim_space):
+        keep = keep & intersect_1d(subs.lo[d, i], subs.hi[d, i],
+                                   upds.lo[d, j], upds.hi[d, j])
+    pairs = jnp.where(keep[:, None], pairs, -1)
+    # compact (stable) so valid pairs are contiguous
+    order = jnp.argsort(~keep, stable=True)
+    return pairs[order], jnp.sum(keep.astype(jnp.int32))

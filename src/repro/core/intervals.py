@@ -1,0 +1,145 @@
+"""Extent (interval / d-rectangle) containers and DDM workload generators.
+
+Terminology follows the paper: *subscription* extents ``S`` and *update*
+extents ``U`` are axis-parallel d-rectangles; the DDM problem asks for all
+pairs ``(S_i, U_j)`` with a non-empty closed intersection.
+
+Everything here is structure-of-arrays: an extent set with ``n`` members in
+``d`` dimensions is a pair of ``(d, n)`` (or ``(n,)`` for d=1) arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Extents:
+    """A set of closed intervals (d=1) or d-rectangles (lo/hi of shape (d, n))."""
+
+    lo: jax.Array
+    hi: jax.Array
+
+    def tree_flatten(self):
+        return (self.lo, self.hi), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def ndim_space(self) -> int:
+        return 1 if self.lo.ndim == 1 else self.lo.shape[0]
+
+    @property
+    def size(self) -> int:
+        return self.lo.shape[-1]
+
+    def dim(self, d: int) -> "Extents":
+        """Project onto dimension ``d`` (paper §3: d-dim reduces to 1-dim)."""
+        if self.lo.ndim == 1:
+            if d != 0:
+                raise ValueError(f"1-d extents have no dimension {d}")
+            return self
+        return Extents(self.lo[d], self.hi[d])
+
+    def validate(self) -> "Extents":
+        if self.lo.shape != self.hi.shape:
+            raise ValueError(f"lo/hi shape mismatch: {self.lo.shape} vs {self.hi.shape}")
+        return self
+
+
+def intersect_1d(x_lo, x_hi, y_lo, y_hi):
+    """Algorithm 1 of the paper: closed-interval overlap test (broadcasts)."""
+    return jnp.logical_and(x_lo <= y_hi, y_lo <= x_hi)
+
+
+def intersect_ddim(a: Extents, b: Extents):
+    """d-rectangles overlap iff all 1-d projections overlap (paper §3)."""
+    if a.ndim_space == 1:
+        return intersect_1d(a.lo, a.hi, b.lo, b.hi)
+    per_dim = intersect_1d(a.lo[:, :, None], a.hi[:, :, None],
+                           b.lo[:, None, :], b.hi[:, None, :])
+    return jnp.all(per_dim, axis=0)
+
+
+def make_uniform_workload(
+    key: jax.Array,
+    n_sub: int,
+    n_upd: int,
+    alpha: float,
+    length: float = 1.0e6,
+    d: int = 1,
+) -> Tuple[Extents, Extents]:
+    """The paper's §5 benchmark workload.
+
+    ``N = n_sub + n_upd`` extents, each of identical side ``l = alpha * L / N``
+    placed uniformly at random on a routing space of side ``L``. ``alpha`` is
+    the *overlapping degree* — an indirect control of the match count ``K``.
+    """
+    total = n_sub + n_upd
+    seg_len = alpha * length / total
+    shape = (total,) if d == 1 else (d, total)
+    k_lo, = jax.random.split(key, 1)
+    lo = jax.random.uniform(k_lo, shape, minval=0.0, maxval=length - seg_len,
+                            dtype=jnp.float32)
+    hi = lo + jnp.float32(seg_len)
+    subs = Extents(lo[..., :n_sub], hi[..., :n_sub])
+    upds = Extents(lo[..., n_sub:], hi[..., n_sub:])
+    return subs, upds
+
+
+def make_clustered_workload(
+    key: jax.Array,
+    n_sub: int,
+    n_upd: int,
+    alpha: float,
+    n_clusters: int = 16,
+    length: float = 1.0e6,
+) -> Tuple[Extents, Extents]:
+    """A skewed workload (hot spots) to stress load balance of the sweep."""
+    total = n_sub + n_upd
+    seg_len = alpha * length / total
+    kc, kj = jax.random.split(key)
+    centers = jax.random.uniform(kc, (n_clusters,), minval=0.0, maxval=length)
+    assign = jax.random.randint(kj, (total,), 0, n_clusters)
+    jitter = jax.random.normal(jax.random.fold_in(kj, 1), (total,)) * (length / (20 * n_clusters))
+    lo = jnp.clip(centers[assign] + jitter, 0.0, length - seg_len).astype(jnp.float32)
+    hi = lo + jnp.float32(seg_len)
+    return (Extents(lo[:n_sub], hi[:n_sub]), Extents(lo[n_sub:], hi[n_sub:]))
+
+
+def brute_force_count_numpy(subs: Extents, upds: Extents) -> int:
+    """O(n·m) oracle on host — ground truth for every matching test."""
+    s_lo = np.asarray(subs.lo)
+    s_hi = np.asarray(subs.hi)
+    u_lo = np.asarray(upds.lo)
+    u_hi = np.asarray(upds.hi)
+    if s_lo.ndim == 1:
+        mask = (s_lo[:, None] <= u_hi[None, :]) & (u_lo[None, :] <= s_hi[:, None])
+        return int(mask.sum())
+    mask = np.ones((s_lo.shape[1], u_lo.shape[1]), dtype=bool)
+    for dd in range(s_lo.shape[0]):
+        mask &= (s_lo[dd][:, None] <= u_hi[dd][None, :]) & (u_lo[dd][None, :] <= s_hi[dd][:, None])
+    return int(mask.sum())
+
+
+def brute_force_pairs_numpy(subs: Extents, upds: Extents) -> set:
+    """Host oracle returning the exact match set {(i, j)}."""
+    s_lo = np.asarray(subs.lo)
+    s_hi = np.asarray(subs.hi)
+    u_lo = np.asarray(upds.lo)
+    u_hi = np.asarray(upds.hi)
+    if s_lo.ndim == 1:
+        mask = (s_lo[:, None] <= u_hi[None, :]) & (u_lo[None, :] <= s_hi[:, None])
+    else:
+        mask = np.ones((s_lo.shape[1], u_lo.shape[1]), dtype=bool)
+        for dd in range(s_lo.shape[0]):
+            mask &= (s_lo[dd][:, None] <= u_hi[dd][None, :]) & (u_lo[dd][None, :] <= s_hi[dd][:, None])
+    ii, jj = np.nonzero(mask)
+    return set(zip(ii.tolist(), jj.tolist()))

@@ -1,0 +1,108 @@
+"""Match matrices and padded index lists — the interface between DDM
+matching and block-sparse attention.
+
+Attention blocks are extents: query block i *subscribes* to the key range
+it is interested in (sliding window, global section, its own document, …)
+and KV block j *updates* the token range it covers.  The match matrix is the
+block-sparsity structure consumed by the flash-attention kernel, and the
+padded row-index form is its gather schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.intervals import Extents, intersect_1d
+
+
+@jax.jit
+def match_matrix(subs: Extents, upds: Extents) -> jax.Array:
+    """(n, m) boolean match matrix (1-d extents)."""
+    return intersect_1d(subs.lo[:, None], subs.hi[:, None],
+                        upds.lo[None, :], upds.hi[None, :])
+
+
+@jax.jit
+def match_matrix_ddim(subs: Extents, upds: Extents) -> jax.Array:
+    """(n, m) boolean match matrix for d-rectangles (AND over projections)."""
+    if subs.ndim_space == 1:
+        return match_matrix(subs, upds)
+    mask = jnp.ones((subs.size, upds.size), jnp.bool_)
+    for d in range(subs.ndim_space):
+        mask = mask & intersect_1d(subs.lo[d][:, None], subs.hi[d][:, None],
+                                   upds.lo[d][None, :], upds.hi[d][None, :])
+    return mask
+
+
+@functools.partial(jax.jit, static_argnames=("max_per_row",))
+def row_index_lists(mask: jax.Array, *, max_per_row: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Per-row padded column-index lists from a boolean matrix.
+
+    Sort-based compaction (ties to the paper's theme): argsort the negated
+    mask rows (stable), so matching columns — in ascending column order —
+    occupy the first ``row_count`` slots.  Returns (idx (n, max_per_row)
+    int32 padded with -1, counts (n,)).
+    """
+    counts = jnp.sum(mask, axis=-1).astype(jnp.int32)
+    order = jnp.argsort(~mask, axis=-1, stable=True)
+    idx = order[:, :max_per_row].astype(jnp.int32)
+    slot = jnp.arange(max_per_row, dtype=jnp.int32)[None, :]
+    idx = jnp.where(slot < counts[:, None], idx, -1)
+    return idx, counts
+
+
+def block_extents_for_sequence(seq_len: int, block: int,
+                               *, window: int | None = None,
+                               causal: bool = True,
+                               num_global_blocks: int = 0) -> Tuple[Extents, Extents]:
+    """Interest extents for block-sparse attention over a token sequence.
+
+    Query block q covers tokens [q·B, (q+1)·B-1]; its *subscription* extent is
+    the key range it may attend to:
+
+      * causal: [0, (q+1)·B - 1]                     (prefix)
+      * + window w: [max(0, q·B - w), (q+1)·B - 1]   (sliding window)
+      * global blocks are modelled by the caller OR-ing in extra extents.
+
+    KV block k's *update* extent is just its token span.  Matching these two
+    sets with the DDM engine yields exactly the block mask of
+    local/global/causal attention.
+    """
+    nq = -(-seq_len // block)
+    q_start = jnp.arange(nq, dtype=jnp.float32) * block
+    q_end = jnp.minimum(q_start + block, seq_len) - 1
+    lo = jnp.zeros((nq,), jnp.float32) if causal else q_start * 0.0
+    if window is not None:
+        lo = jnp.maximum(q_start - window + 1, 0.0)
+    hi = q_end if causal else jnp.full((nq,), float(seq_len - 1), jnp.float32)
+    if num_global_blocks:
+        # global-attending query blocks also subscribe to everything
+        is_global = jnp.arange(nq) < num_global_blocks
+        lo = jnp.where(is_global, 0.0, lo)
+        hi = jnp.where(is_global, float(seq_len - 1), hi)
+    q_sub = Extents(lo, hi)
+    kv_upd = Extents(q_start, q_end)
+    return q_sub, kv_upd
+
+
+def block_mask_from_extents(q_sub: Extents, kv_upd: Extents) -> jax.Array:
+    """Block-sparsity mask (nq, nk) from interest extents (DDM matching)."""
+    return match_matrix(q_sub, kv_upd)
+
+
+def document_extents(doc_ids: jax.Array, num_docs: int) -> Extents:
+    """Per-document token-span extents from a packed doc-id vector.
+
+    doc_ids: (seq,) int32 non-decreasing packed-document labels.  Returns
+    ``num_docs`` extents [first_token, last_token] (empty docs: lo > hi so
+    they match nothing).  Built with searchsorted — sort-based, O(S log D).
+    """
+    seq = doc_ids.shape[0]
+    ids = jnp.arange(num_docs, dtype=doc_ids.dtype)
+    first = jnp.searchsorted(doc_ids, ids, side="left")
+    last = jnp.searchsorted(doc_ids, ids, side="right") - 1
+    return Extents(first.astype(jnp.float32), last.astype(jnp.float32))

@@ -1,0 +1,191 @@
+"""DDM service — the HLA-style Data Distribution Management facade.
+
+Stateful register/modify/unregister of subscription and update regions,
+matching (full and incremental), and event routing — the service the paper's
+algorithm exists to accelerate.  Matching dispatches to the parallel SBM
+sweep for counting and to the rank/enumeration paths for pair reporting;
+*dynamic* re-matching (extents moving, per Pan et al. [20]) recomputes only
+the moved extents against the stationary set.
+
+The service is a host-level object (simulation control plane); the heavy
+lifting runs in jitted JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.intervals import Extents
+from repro.core import matrix as matrix_lib
+from repro.core import rank as rank_lib
+from repro.core import sweep as sweep_lib
+
+
+@dataclasses.dataclass
+class _RegionTable:
+    lo: np.ndarray   # (d, capacity)
+    hi: np.ndarray
+    live: np.ndarray  # (capacity,) bool
+    free: List[int]
+
+    @classmethod
+    def create(cls, d: int, capacity: int) -> "_RegionTable":
+        # Dead slots are [+inf, -inf]: inert for every matcher, including the
+        # endpoint sweep (the -inf upper sorts first and emits nothing; the
+        # +inf lower sorts last and is never emitted against).
+        return cls(
+            lo=np.full((d, capacity), np.inf, np.float32),
+            hi=np.full((d, capacity), -np.inf, np.float32),
+            live=np.zeros((capacity,), bool),
+            free=list(range(capacity - 1, -1, -1)),
+        )
+
+    def insert(self, lo: Sequence[float], hi: Sequence[float]) -> int:
+        if not self.free:
+            raise RuntimeError("region table full — grow capacity")
+        rid = self.free.pop()
+        self.lo[:, rid] = lo
+        self.hi[:, rid] = hi
+        self.live[rid] = True
+        return rid
+
+    def remove(self, rid: int) -> None:
+        if not self.live[rid]:
+            raise KeyError(f"region {rid} not registered")
+        self.live[rid] = False
+        self.lo[:, rid] = np.inf
+        self.hi[:, rid] = -np.inf
+        self.free.append(rid)
+
+    def move(self, rid: int, lo: Sequence[float], hi: Sequence[float]) -> None:
+        if not self.live[rid]:
+            raise KeyError(f"region {rid} not registered")
+        self.lo[:, rid] = lo
+        self.hi[:, rid] = hi
+
+    def extents(self) -> Extents:
+        d = self.lo.shape[0]
+        if d == 1:
+            return Extents(jnp.asarray(self.lo[0]), jnp.asarray(self.hi[0]))
+        return Extents(jnp.asarray(self.lo), jnp.asarray(self.hi))
+
+
+class DDMService:
+    """Data Distribution Management service backed by parallel SBM.
+
+    >>> svc = DDMService(dims=2, capacity=1024)
+    >>> s = svc.register_subscription([0, 0], [10, 10])
+    >>> u = svc.register_update([5, 5], [20, 20])
+    >>> svc.matches_for_update(u)
+    [s]
+    """
+
+    def __init__(self, dims: int = 1, capacity: int = 4096):
+        self.dims = dims
+        self._subs = _RegionTable.create(dims, capacity)
+        self._upds = _RegionTable.create(dims, capacity)
+        self._mask: Optional[np.ndarray] = None  # (cap_s, cap_u) match matrix
+        self._dirty = True
+
+    # -- registration -----------------------------------------------------
+    def register_subscription(self, lo, hi) -> int:
+        rid = self._subs.insert(np.atleast_1d(lo), np.atleast_1d(hi))
+        self._dirty = True
+        return rid
+
+    def register_update(self, lo, hi) -> int:
+        rid = self._upds.insert(np.atleast_1d(lo), np.atleast_1d(hi))
+        self._dirty = True
+        return rid
+
+    def unregister_subscription(self, rid: int) -> None:
+        self._subs.remove(rid)
+        if self._mask is not None:
+            self._mask[rid, :] = False
+        # no full rematch needed: an empty extent matches nothing
+
+    def unregister_update(self, rid: int) -> None:
+        self._upds.remove(rid)
+        if self._mask is not None:
+            self._mask[:, rid] = False
+
+    # -- dynamic DDM (Pan et al. [20]): move/resize with incremental rematch
+    def move_subscription(self, rid: int, lo, hi) -> None:
+        self._subs.move(rid, np.atleast_1d(lo), np.atleast_1d(hi))
+        if self._mask is not None:
+            row = np.array(matrix_lib.match_matrix_ddim(
+                _single(self._subs, rid, self.dims), self._upds.extents()))[0]
+            row &= self._upds.live
+            self._mask[rid, :] = row
+        else:
+            self._dirty = True
+
+    def move_update(self, rid: int, lo, hi) -> None:
+        self._upds.move(rid, np.atleast_1d(lo), np.atleast_1d(hi))
+        if self._mask is not None:
+            col = np.array(matrix_lib.match_matrix_ddim(
+                self._subs.extents(), _single(self._upds, rid, self.dims)))[:, 0]
+            col &= self._subs.live
+            self._mask[:, rid] = col
+        else:
+            self._dirty = True
+
+    # -- matching ----------------------------------------------------------
+    def _ensure_matched(self) -> None:
+        if self._dirty or self._mask is None:
+            mask = np.array(matrix_lib.match_matrix_ddim(
+                self._subs.extents(), self._upds.extents()))
+            mask &= self._subs.live[:, None]
+            mask &= self._upds.live[None, :]
+            self._mask = mask
+            self._dirty = False
+
+    def match_count(self) -> int:
+        """K — delegated to the parallel SBM sweep for d == 1.
+
+        The sweep's precondition is well-formed intervals (lo ≤ hi), so the
+        live extents are compacted first (dead slots are inverted sentinels).
+        """
+        if self.dims == 1:
+            sl = self._subs.live
+            ul = self._upds.live
+            subs = Extents(jnp.asarray(self._subs.lo[0][sl]),
+                           jnp.asarray(self._subs.hi[0][sl]))
+            upds = Extents(jnp.asarray(self._upds.lo[0][ul]),
+                           jnp.asarray(self._upds.hi[0][ul]))
+            if subs.size == 0 or upds.size == 0:
+                return 0
+            return int(sweep_lib.sbm_count(subs, upds))
+        self._ensure_matched()
+        return int(self._mask.sum())
+
+    def matches_for_update(self, rid: int) -> List[int]:
+        self._ensure_matched()
+        return np.nonzero(self._mask[:, rid])[0].tolist()
+
+    def matches_for_subscription(self, rid: int) -> List[int]:
+        self._ensure_matched()
+        return np.nonzero(self._mask[rid, :])[0].tolist()
+
+    def all_pairs(self) -> Set[Tuple[int, int]]:
+        self._ensure_matched()
+        ii, jj = np.nonzero(self._mask)
+        return set(zip(ii.tolist(), jj.tolist()))
+
+    # -- routing -----------------------------------------------------------
+    def route(self, update_rid: int, payload) -> Dict[int, object]:
+        """Deliver ``payload`` from an update region to every matching
+        subscription (the DDM send path)."""
+        return {sid: payload for sid in self.matches_for_update(update_rid)}
+
+
+def _single(table: _RegionTable, rid: int, dims: int) -> Extents:
+    if dims == 1:
+        return Extents(jnp.asarray(table.lo[0, rid:rid + 1]),
+                       jnp.asarray(table.hi[0, rid:rid + 1]))
+    return Extents(jnp.asarray(table.lo[:, rid:rid + 1]),
+                   jnp.asarray(table.hi[:, rid:rid + 1]))

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical layers.
+
+* ``sbm_sweep`` — the paper's parallel sweep (counting + bitmask delta sets).
+* ``flash_attention`` — interest-managed block-sparse FlashAttention whose
+  block schedule is produced by the DDM matching engine.
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
+"""
+from repro.kernels.ops import (
+    sbm_count_kernel,
+    sbm_delta_bitmasks,
+    flash_attention,
+    build_block_structure,
+)
+
+__all__ = ["sbm_count_kernel", "sbm_delta_bitmasks", "flash_attention",
+           "build_block_structure"]

@@ -1,0 +1,148 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work on CPU
+(kernel body emulated) and compile to Mosaic on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import matrix as matrix_lib
+from repro.core.intervals import Extents
+from repro.core.sweep import encode_endpoints, _indicator_deltas, _pad_stream
+from repro.kernels import flash_attention as fa
+from repro.kernels import sbm_sweep as sweep_kernels
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# SBM counting sweep
+# ---------------------------------------------------------------------------
+
+def sbm_count_kernel(subs: Extents, upds: Extents, *, block_size: int = 2048,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """K via the Pallas two-pass sweep (sort on XLA, sweep on the kernel)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    ep = _pad_stream(encode_endpoints(subs, upds), block_size)
+    deltas = jnp.stack(_indicator_deltas(ep))          # (4, total)
+    _, k = sweep_kernels.sweep_count_pallas(
+        deltas, block_size=block_size, interpret=interpret)
+    return k
+
+
+def sbm_delta_bitmasks(subs: Extents, upds: Extents, *, block_size: int = 1024,
+                       interpret: Optional[bool] = None):
+    """Algorithm 6's (Sadd, Sdel, Uadd, Udel) as per-segment bitmask words."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n, m = subs.lo.shape[0], upds.lo.shape[0]
+    ep = _pad_stream(encode_endpoints(subs, upds), block_size)
+    up = ep.is_upper.astype(jnp.int32)
+    valid_s = (ep.is_sub & (ep.owner >= 0)).astype(jnp.int32)
+    valid_u = (~ep.is_sub & (ep.owner >= 0)).astype(jnp.int32)
+    sw = -(-n // 32)
+    uw = -(-m // 32)
+    sadd, sdel = sweep_kernels.delta_bitmasks_pallas(
+        ep.owner, up, valid_s, num_words=max(sw, 1), block_size=block_size,
+        interpret=interpret)
+    uadd, udel = sweep_kernels.delta_bitmasks_pallas(
+        ep.owner, up, valid_u, num_words=max(uw, 1), block_size=block_size,
+        interpret=interpret)
+    return (sadd, sdel, uadd, udel)
+
+
+# ---------------------------------------------------------------------------
+# Interest-managed (block-sparse) flash attention
+# ---------------------------------------------------------------------------
+
+def build_block_structure(
+    seq_len_q: int,
+    seq_len_kv: int,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    causal: bool = True,
+    window: Optional[int] = None,
+    num_global_blocks: int = 0,
+    extra_block_mask: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Static block sparsity via DDM interest matching (host-side).
+
+    Query-block subscription extents vs KV-block update extents are matched
+    with the core engine; the result is the (kv_index, kv_count) gather
+    schedule consumed by the kernel.  Static by construction — attention
+    structure is a function of shape parameters, not of data.
+    """
+    nq = seq_len_q // block_q
+    nk = seq_len_kv // block_k
+    # decode-style (Sq < Skv): query block i covers absolute positions
+    # [off + i*bq, off + (i+1)*bq) where off right-aligns q to the kv window.
+    off = seq_len_kv - seq_len_q
+    q_start = np.arange(nq) * block_q + off
+    q_end = q_start + block_q - 1
+    lo = np.zeros(nq) if causal else np.zeros(nq)
+    hi = q_end.astype(np.float64) if causal else np.full(nq, seq_len_kv - 1)
+    if window is not None:
+        lo = np.maximum(q_start - window + 1, 0).astype(np.float64)
+    if num_global_blocks:
+        lo[:num_global_blocks] = 0.0
+        hi[:num_global_blocks] = seq_len_kv - 1
+    k_start = np.arange(nk) * block_k
+    k_end = k_start + block_k - 1
+    # 1-D interval matching (the DDM primitive)
+    bm = (lo[:, None] <= k_end[None, :]) & (k_start[None, :] <= hi[:, None])
+    if extra_block_mask is not None:
+        bm |= np.asarray(extra_block_mask, bool)
+    counts = bm.sum(axis=1).astype(np.int32)
+    max_nk = max(int(counts.max()), 1)
+    kv_index = np.zeros((nq, max_nk), np.int32)
+    for i in range(nq):
+        idx = np.nonzero(bm[i])[0]
+        kv_index[i, :len(idx)] = idx
+    return kv_index, counts, bm
+
+
+def flash_attention(
+    q: jax.Array,            # (B, H, Sq, D)
+    k: jax.Array,            # (B, Hkv, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_segments: Optional[jax.Array] = None,
+    kv_segments: Optional[jax.Array] = None,
+    num_global_blocks: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Interest-managed flash attention (public API).
+
+    The block schedule comes from DDM matching over the (causal, window,
+    global) interest extents; within-block masking handles the residual
+    token-level structure (diagonal causality, window edges, document
+    boundaries via segments).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    kv_index, kv_count, _ = build_block_structure(
+        Sq, Skv, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, num_global_blocks=num_global_blocks)
+    return fa.flash_attention_kernel(
+        q, k, v, jnp.asarray(kv_index), jnp.asarray(kv_count),
+        q_segments, kv_segments,
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, q_offset=Skv - Sq,
+        interpret=interpret)

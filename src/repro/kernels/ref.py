@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``ref_*`` function computes the same mathematical object as its kernel
+with straightforward dense jnp code; kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_sweep_count(deltas: jax.Array):
+    """Oracle for sweep_count_pallas: monolithic cumsums over the stream."""
+    c = jnp.cumsum(deltas, axis=-1)
+    sub_up = deltas[1]
+    upd_up = deltas[3]
+    active_sub_before = c[0] - (c[1] - sub_up)
+    active_upd_before = c[2] - (c[3] - upd_up)
+    emit = sub_up * active_upd_before + upd_up * active_sub_before
+    return emit, jnp.sum(emit)
+
+
+def ref_delta_bitmasks(owner, is_upper, valid, *, num_words: int,
+                       block_size: int):
+    """Oracle for delta_bitmasks_pallas: per-segment Add/Del membership.
+
+    Alg. 6 invariant: Add[p] = extents whose lower is in T_p and upper is
+    not; Del[p] = upper in T_p, lower not.  Computed by sequential replay.
+    """
+    import numpy as np
+    owner = np.asarray(owner)
+    is_upper = np.asarray(is_upper)
+    valid = np.asarray(valid)
+    total = owner.shape[0]
+    num_blocks = total // block_size
+    add = np.zeros((num_blocks, num_words), np.uint32)
+    rem = np.zeros((num_blocks, num_words), np.uint32)
+    for p in range(num_blocks):
+        a, d = set(), set()
+        for t in range(p * block_size, (p + 1) * block_size):
+            if not valid[t]:
+                continue
+            o = int(owner[t])
+            if not is_upper[t]:
+                a.add(o)
+            elif o in a:
+                a.discard(o)
+            else:
+                d.add(o)
+        for o in a:
+            add[p, o // 32] |= np.uint32(1) << np.uint32(o % 32)
+        for o in d:
+            rem[p, o // 32] |= np.uint32(1) << np.uint32(o % 32)
+    return jnp.asarray(add), jnp.asarray(rem)
+
+
+def ref_attention(
+    q: jax.Array,            # (B, H, Sq, D)
+    k: jax.Array,            # (B, Hkv, Skv, D)
+    v: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_segments: Optional[jax.Array] = None,
+    kv_segments: Optional[jax.Array] = None,
+    block_mask: Optional[jax.Array] = None,   # (nq_blocks, nk_blocks) bool
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Dense-mask attention oracle (f32 softmax), GQA via head repetition."""
+    B, H, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    rep = H // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # chunked prefill: q right-aligned within the KV window
+    q_pos = (jnp.arange(Sq) + (Skv - Sq))[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    if block_mask is not None:
+        token_bm = jnp.repeat(jnp.repeat(block_mask, block_q, axis=0),
+                              block_k, axis=1)[:Sq, :Skv]
+        mask &= token_bm
+    mask = mask[None, None]
+    if q_segments is not None:
+        seg = q_segments[:, :, None] == kv_segments[:, None, :]
+        mask = mask & seg[:, None]
+    s = jnp.where(mask, s, -1.0e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows: softmax of all -1e30 is uniform garbage → zero them
+    any_valid = jnp.any(mask, axis=-1, keepdims=True)
+    p = jnp.where(any_valid, p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

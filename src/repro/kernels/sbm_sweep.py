@@ -1,0 +1,187 @@
+"""Pallas TPU kernels for the parallel SBM sweep (paper Algorithms 5+6).
+
+Hardware mapping (see DESIGN.md §2): the paper's "P OpenMP threads over a
+shared sorted array" becomes a Pallas grid over VMEM-resident blocks of the
+sorted endpoint stream; the paper's shared-memory master scan becomes a tiny
+host-side exclusive scan between the two kernel passes.
+
+Two kernel families:
+
+* **Counting sweep** (two passes):
+    pass A  — per-block partial sums of the four ±1 indicator streams
+              (sub-lower, sub-upper, upd-lower, upd-upper);
+    (host)  — exclusive scan of the (num_blocks, 4) partials — Fig. 5 step 2;
+    pass B  — per-block local cumsums + carried offsets → per-endpoint
+              emission counts.  Σ = K.
+  Both passes are branch-free VPU code over int32 lanes.
+
+* **Delta-set bitmask scan** (Algorithm 6 lines 1–17 verbatim):
+  each grid block performs the *sequential* local scan of its segment,
+  maintaining Add/Del bitmasks in VMEM words — unions and differences are
+  bitwise ops, replacing the paper's std::set.  The per-segment parallelism
+  is across grid blocks, exactly like the paper's per-thread segments.
+
+Block shapes: endpoint blocks are (BLOCK,) int32 lanes with BLOCK a multiple
+of 128 (VPU lane width); bitmask scratch is ceil(n/32) uint32 words — 1M
+intervals ≈ 128 KiB of VMEM, well within the ~16 MiB/core budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# Counting sweep — pass A: per-block partial sums
+# ---------------------------------------------------------------------------
+
+def _block_sums_kernel(deltas_ref, sums_ref):
+    # deltas_ref: (4, BLOCK) int32; sums_ref: (1, 4) int32
+    sums_ref[0, :] = jnp.sum(deltas_ref[...], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Counting sweep — pass B: local scan + carry → emission counts
+# ---------------------------------------------------------------------------
+
+def _emission_kernel(deltas_ref, offsets_ref, emit_ref):
+    # deltas_ref: (4, BLOCK) int32 — [sub_lo, sub_up, upd_lo, upd_up]
+    # offsets_ref: (1, 4) int32 — exclusive cross-block carry (master scan)
+    # emit_ref: (1, BLOCK) int32 — per-endpoint emission counts
+    deltas = deltas_ref[...]
+    carry = offsets_ref[0, :]
+    c = jnp.cumsum(deltas, axis=-1) + carry[:, None]
+    sub_up = deltas[1]
+    upd_up = deltas[3]
+    active_sub_before = c[0] - (c[1] - sub_up)
+    active_upd_before = c[2] - (c[3] - upd_up)
+    emit_ref[0, :] = sub_up * active_upd_before + upd_up * active_sub_before
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def sweep_count_pallas(deltas: jax.Array, *, block_size: int = 2048,
+                       interpret: bool = False):
+    """Counting sweep over pre-sorted indicator deltas.
+
+    ``deltas``: (4, total) int32 — the four indicator streams of the sorted
+    endpoint stream, ``total`` padded to a multiple of ``block_size``
+    (callers use :func:`repro.kernels.ops.sbm_count_kernel` which handles
+    encoding/sorting/padding).  Returns (emission_counts (total,), K).
+    """
+    _, total = deltas.shape
+    if total % block_size:
+        raise ValueError(f"{total=} not a multiple of {block_size=}")
+    num_blocks = total // block_size
+
+    # Pass A — paper Fig. 5 step 1 (parallel over blocks).
+    sums = pl.pallas_call(
+        _block_sums_kernel,
+        grid=(num_blocks,),
+        in_specs=[pl.BlockSpec((4, block_size), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_blocks, 4), jnp.int32),
+        interpret=interpret,
+    )(deltas)
+
+    # Master step — Fig. 5 step 2: exclusive scan over P partials (tiny).
+    offsets = jnp.cumsum(sums, axis=0) - sums
+
+    # Pass B — Fig. 5 step 3 + emission (parallel over blocks).
+    emit = pl.pallas_call(
+        _emission_kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((4, block_size), lambda i: (0, i)),
+            pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_size), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_blocks, block_size), jnp.int32),
+        interpret=interpret,
+    )(deltas, offsets)
+
+    emit = emit.reshape(total)
+    return emit, jnp.sum(emit)
+
+
+# ---------------------------------------------------------------------------
+# Delta-set bitmask scan (Algorithm 6 lines 1-17, set semantics, on-chip)
+# ---------------------------------------------------------------------------
+
+def _delta_bitmask_kernel(owner_ref, is_upper_ref, valid_ref,
+                          add_ref, del_ref):
+    """One grid block = one segment T_p; sequential local scan (the paper's
+    per-thread loop), sets as uint32 bitmask words in VMEM.
+
+    owner_ref/is_upper_ref/valid_ref: (1, BLOCK) int32 endpoint records of
+    ONE extent type (sub or upd) — records of the other type have valid=0.
+    add_ref/del_ref: (1, W) uint32 — Sadd[p]/Sdel[p] bitmask words.
+    """
+    add_ref[...] = jnp.zeros_like(add_ref)
+    del_ref[...] = jnp.zeros_like(del_ref)
+    block = owner_ref.shape[1]
+
+    def body(t, _):
+        owner = owner_ref[0, t]
+        upper = is_upper_ref[0, t]
+        valid = valid_ref[0, t]
+        w = owner // 32
+        bit = (jnp.uint32(1) << (owner % 32).astype(jnp.uint32))
+        add_w = add_ref[0, w]
+        del_w = del_ref[0, w]
+        in_add = (add_w & bit) != 0
+        # lower endpoint: Add ∪= {i}
+        # upper endpoint: if i ∈ Add: Add \= {i}  else  Del ∪= {i}
+        new_add = jnp.where(
+            valid == 0, add_w,
+            jnp.where(upper == 0, add_w | bit,
+                      jnp.where(in_add, add_w & ~bit, add_w)))
+        new_del = jnp.where(
+            (valid != 0) & (upper != 0) & ~in_add, del_w | bit, del_w)
+        add_ref[0, w] = new_add
+        del_ref[0, w] = new_del
+        return ()
+
+    lax.fori_loop(0, block, body, ())
+
+
+@functools.partial(jax.jit, static_argnames=("num_words", "block_size",
+                                             "interpret"))
+def delta_bitmasks_pallas(owner: jax.Array, is_upper: jax.Array,
+                          valid: jax.Array, *, num_words: int,
+                          block_size: int = 1024, interpret: bool = False):
+    """Per-segment Add/Del bitmasks for one extent type.
+
+    Inputs are (total,) int32 slices of the sorted endpoint stream with
+    ``valid`` selecting this extent type; ``total`` must be a multiple of
+    ``block_size``.  Returns (add, del): (num_blocks, num_words) uint32 —
+    exactly Algorithm 6's Sadd[p]/Sdel[p] (or Uadd/Udel).
+    """
+    total = owner.shape[0]
+    if total % block_size:
+        raise ValueError(f"{total=} not a multiple of {block_size=}")
+    num_blocks = total // block_size
+    owner2 = jnp.clip(owner, 0, None).reshape(1, total)
+    add, rem = pl.pallas_call(
+        _delta_bitmask_kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, block_size), lambda i: (0, i)),
+            pl.BlockSpec((1, block_size), lambda i: (0, i)),
+            pl.BlockSpec((1, block_size), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, num_words), lambda i: (i, 0)),
+            pl.BlockSpec((1, num_words), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_blocks, num_words), jnp.uint32),
+            jax.ShapeDtypeStruct((num_blocks, num_words), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(owner2, is_upper.reshape(1, total), valid.reshape(1, total))
+    return add, rem

@@ -1,0 +1,145 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax pins the host platform device count
+# at first initialization.  (See MULTI-POD DRY-RUN spec.)
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh)
+cell against ShapeDtypeStructs (no allocation), then record
+``memory_analysis()`` / ``cost_analysis()`` / collective-op byte sums as
+JSON artifacts for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out benchmarks/artifacts
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch import steps as steps_lib
+from repro.launch.hlo_analysis import analyze_compiled
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import Model
+from repro.parallel.sharding import make_sharder
+from repro.train.optimizer import AdamW, cosine_schedule
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sharder = make_sharder(cfg, mesh)
+    model = Model(cfg, sharder)
+    from repro.perf.analytic import (bytes_model, flops_model,
+                                     model_flops_reference)
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "analytic": flops_model(cfg, shape),
+        "analytic_bytes": bytes_model(cfg, shape),
+        "model_flops_ref": model_flops_reference(cfg, shape),
+    }
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt = AdamW(cosine_schedule(3e-4, 100, 10_000))
+            step = steps_lib.make_train_step(model, opt)
+            args = (steps_lib.sds_params(model, sharder),
+                    steps_lib.sds_opt_state(model, sharder, opt),
+                    steps_lib.sds_batch(cfg, shape, sharder))
+            fn = jax.jit(step, donate_argnums=(0, 1))
+        elif shape.kind == "prefill":
+            step = steps_lib.make_prefill_step(model)
+            args = (steps_lib.sds_params(model, sharder),
+                    steps_lib.sds_batch(cfg, shape, sharder),
+                    steps_lib.sds_cache(model, sharder, shape.global_batch,
+                                        shape.seq_len))
+            fn = jax.jit(step, donate_argnums=(2,))
+        else:  # decode
+            step = steps_lib.make_decode_step(model, cfg.is_encoder_decoder)
+            args = [steps_lib.sds_params(model, sharder, cfg.dtype),
+                    steps_lib.sds_token(cfg, shape.global_batch, sharder),
+                    steps_lib.sds_cache(model, sharder, shape.global_batch,
+                                        shape.seq_len),
+                    steps_lib.sds_scalar(sharder)]
+            if cfg.is_encoder_decoder:
+                args.append(steps_lib.sds_enc_out(
+                    cfg, shape.global_batch, shape.seq_len, sharder))
+            args = tuple(args)
+            fn = jax.jit(step, donate_argnums=(2,))
+        lowered = fn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        rec.update(analyze_compiled(compiled))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/artifacts")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    n_devices = jax.device_count()
+    assert n_devices == 512, f"expected 512 emulated devices, got {n_devices}"
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            ok, why = shape_applicable(arch, shape_name)
+            for multi in meshes:
+                tag = f"{'multi' if multi else 'single'}_{arch}_{shape_name}"
+                path = outdir / f"dryrun_{tag}.json"
+                if args.skip_existing and path.exists():
+                    print(f"[skip existing] {tag}")
+                    continue
+                if not ok:
+                    path.write_text(json.dumps(
+                        {"arch": arch, "shape": shape_name,
+                         "mesh": "2x16x16" if multi else "16x16",
+                         "skipped": why}, indent=2))
+                    print(f"[SKIP] {tag}: {why}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, multi)
+                    path.write_text(json.dumps(rec, indent=2))
+                    cb = rec.get("collectives", {}).get("wire_bytes", 0)
+                    fl = rec.get("cost", {}).get("flops", 0)
+                    print(f"[OK] {tag}: lower {rec['lower_s']}s "
+                          f"compile {rec['compile_s']}s flops {fl:.3e} "
+                          f"coll {cb/1e9:.2f}GB", flush=True)
+                except Exception as e:
+                    failures += 1
+                    path.write_text(json.dumps(
+                        {"arch": arch, "shape": shape_name,
+                         "mesh": "2x16x16" if multi else "16x16",
+                         "error": str(e),
+                         "traceback": traceback.format_exc()}, indent=2))
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

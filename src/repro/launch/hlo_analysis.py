@@ -1,0 +1,229 @@
+"""Post-SPMD HLO analysis: collective-op byte accounting with while-loop
+(scan) trip-count multiplication, + compiled-artifact summaries.
+
+Why trip counts matter: ``lax.scan`` lowers to an HLO ``while`` whose body
+appears ONCE in the module.  Naive text scans (and ``cost_analysis`` itself
+— verified in tests/test_perf_analytic.py) count each scanned collective a
+single time, under-reporting a 32-layer model's gradient all-reduces by 32×.
+We build the computation call graph, extract every while's trip count from
+its condition, and multiply nested bodies through.
+
+No JAX device state is touched at import (safe to import from benchmarks).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|condition|body|branch_computations)=\{?%?([\w\.\-,%\s]+)\}?")
+_CONST_RE = re.compile(r"=\s*s(?:32|64)\[\]\s*constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_START_RE.match(line.strip())
+            if m and stripped.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+        else:
+            if stripped == "}" or stripped.startswith("} //"):
+                cur = None
+            else:
+                comps[cur].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Trip count from a while condition: the compared constant."""
+    consts = []
+    for line in cond_lines:
+        m = _CONST_RE.search(line)
+        if m:
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _collectives_in(lines: List[str]) -> List[Tuple[str, int, float, float]]:
+    """(kind, operand_bytes, wire_bytes, wire_bytes_adj) per collective op.
+
+    ``wire_bytes_adj`` halves all-reduces that XLA's AllReducePromotion pass
+    widened from bf16 to f32 (visible as ``to_apply=%..._promoted``): real
+    TPU ICI reduces bf16 on the wire; the f32 width is a CPU-backend
+    compile artifact.  Raw and adjusted are both reported.
+    """
+    out = []
+    for line in lines:
+        kind = None
+        for k in _COLLECTIVES:
+            if f" {k}(" in line or f" {k}-start(" in line:
+                kind = k
+                break
+        if kind is None:
+            continue
+        lhs = line.split(f" {kind}(", 1)[0] if f" {kind}(" in line \
+            else line.split(f" {kind}-start(", 1)[0]
+        result_bytes = sum(_shape_bytes(m.group(1), m.group(2))
+                           for m in _SHAPE_RE.finditer(lhs))
+        if result_bytes == 0:
+            continue
+        g = _group_size(line)
+        if kind == "all-gather":
+            operand, full = result_bytes // g, result_bytes
+        elif kind == "reduce-scatter":
+            operand = full = result_bytes * g
+        else:
+            operand = full = result_bytes
+        if kind == "all-reduce":
+            wire = 2.0 * (g - 1) / g * full
+        elif kind == "collective-permute":
+            wire = float(full)
+        else:
+            wire = (g - 1) / g * full
+        adj = wire / 2.0 if (kind == "all-reduce"
+                             and "_promoted" in line) else wire
+        out.append((kind, operand, wire, adj))
+    return out
+
+
+def collective_bytes(hlo_text: str) -> Dict:
+    """Scan-aware collective byte accounting for a per-device SPMD module.
+
+    operand_bytes — the spec's "sum of operand sizes" (all-gather operands
+    are result/g; reduce-scatter operands are the full pre-scatter array).
+    wire_bytes — ring-algorithm per-device link-traffic estimate
+    (all-reduce 2(g-1)/g·size; gather/scatter/all-to-all (g-1)/g; permute 1×).
+    Both are multiplied by enclosing while-loop trip counts.
+    """
+    comps = _split_computations(hlo_text)
+
+    # computation → list of (child computation, multiplier)
+    children: Dict[str, List[Tuple[str, int]]] = {c: [] for c in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                children[name].append((body, trips))
+            elif " call(" in line or " conditional(" in line:
+                for mm in re.finditer(r"(?:to_apply|branch_computations)="
+                                      r"\{?%?([\w\.\-]+)", line):
+                    children[name].append((mm.group(1), 1))
+
+    # entry = computation not referenced as a child/cond/fusion target;
+    # robust fallback: the one whose name contains 'main'.
+    entry = None
+    for name in comps:
+        if name == "main" or name.endswith(".main") or "main." in name:
+            entry = name
+            break
+    if entry is None:
+        referenced = {c for kids in children.values() for c, _ in kids}
+        candidates = [c for c in comps if c not in referenced]
+        entry = candidates[0] if candidates else next(iter(comps))
+
+    totals = {k: {"operand_bytes": 0.0, "wire_bytes": 0.0,
+                  "wire_bytes_adj": 0.0, "count": 0.0}
+              for k in _COLLECTIVES}
+
+    def visit(comp: str, mult: float):
+        if mult <= 0 or comp not in comps:
+            return
+        for kind, operand, wire, adj in _collectives_in(comps[comp]):
+            totals[kind]["operand_bytes"] += operand * mult
+            totals[kind]["wire_bytes"] += wire * mult
+            totals[kind]["wire_bytes_adj"] += adj * mult
+            totals[kind]["count"] += mult
+        for child, trips in children.get(comp, []):
+            visit(child, mult * trips)
+
+    visit(entry, 1.0)
+    return {
+        "by_op": totals,
+        "operand_bytes": sum(v["operand_bytes"] for v in totals.values()),
+        "wire_bytes": sum(v["wire_bytes"] for v in totals.values()),
+        "wire_bytes_adj": sum(v["wire_bytes_adj"] for v in totals.values()),
+        "count": sum(v["count"] for v in totals.values()),
+        "entry": entry,
+    }
+
+
+def while_trip_counts(hlo_text: str) -> Dict[str, int]:
+    """body-computation → trip count (exposed for tests/debugging)."""
+    comps = _split_computations(hlo_text)
+    out = {}
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                out[m.group(2)] = _trip_count(comps.get(m.group(1), []))
+    return out
+
+
+def analyze_compiled(compiled) -> Dict:
+    """memory_analysis + cost_analysis + scan-aware collective accounting."""
+    info: Dict = {}
+    try:
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    info[attr] = int(v)
+    except Exception as e:          # pragma: no cover
+        info["memory_analysis_error"] = str(e)
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        info["cost"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        }
+    except Exception as e:          # pragma: no cover
+        info["cost_analysis_error"] = str(e)
+    try:
+        text = compiled.as_text()
+        info["collectives"] = collective_bytes(text)
+        info["while_trips"] = while_trip_counts(text)
+        info["hlo_chars"] = len(text)
+    except Exception as e:          # pragma: no cover
+        info["hlo_error"] = str(e)
+    return info

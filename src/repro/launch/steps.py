@@ -1,0 +1,115 @@
+"""Step builders + ShapeDtypeStruct trees shared by train.py / serve.py /
+dryrun.py.  Everything here is allocation-free: the dry-run lowers against
+ShapeDtypeStructs that carry NamedShardings."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeDef, input_specs
+from repro.models.api import ModelConfig, ParamDef
+from repro.models.transformer import Model
+from repro.parallel.sharding import Sharder
+from repro.train.optimizer import AdamW, AdamState, apply_updates
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, opt: AdamW):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        updates, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(model: Model, enc_dec: bool):
+    if enc_dec:
+        def decode_step(params, token, cache, pos, enc_out):
+            return model.decode_step(params, token, cache, pos, enc_out)
+    else:
+        def decode_step(params, token, cache, pos):
+            return model.decode_step(params, token, cache, pos)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct trees with shardings
+# ---------------------------------------------------------------------------
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def sds_params(model: Model, sharder: Sharder, dtype=None):
+    cfg = model.cfg
+    dtype = dtype or cfg.param_dtype
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype,
+                                       sharding=sharder.named(d.axes, d.shape)),
+        model.defs(), is_leaf=_is_def)
+
+
+def sds_opt_state(model: Model, sharder: Sharder, opt: AdamW) -> AdamState:
+    moments = jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, opt.moment_dtype,
+                                       sharding=sharder.named(d.axes, d.shape)),
+        model.defs(), is_leaf=_is_def)
+    step = jax.ShapeDtypeStruct((), jnp.int32, sharding=sharder.replicated())
+    return AdamState(step, moments,
+                     jax.tree.map(lambda s: s, moments))
+
+
+def sds_batch(cfg: ModelConfig, shape: ShapeDef, sharder: Sharder):
+    out = {}
+    for name, sds in input_specs(cfg, shape).items():
+        axes = ("batch",) + (None,) * (len(sds.shape) - 1)
+        out[name] = jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                         sharding=sharder.named(axes, sds.shape))
+    return out
+
+
+def sds_cache(model: Model, sharder: Sharder, batch: int, max_len: int):
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    axes_tree = model.cache_spec_axes()
+    flat_s, treedef = jax.tree.flatten(shapes)
+    flat_a = jax.tree.leaves(axes_tree, is_leaf=_is_axes)
+    assert len(flat_s) == len(flat_a), (len(flat_s), len(flat_a))
+    leaves = [jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                   sharding=sharder.named(a, s.shape))
+              for s, a in zip(flat_s, flat_a)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def sds_enc_out(cfg: ModelConfig, batch: int, seq: int, sharder: Sharder):
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cfg.dtype,
+                                sharding=sharder.named(("batch", None, None),
+                                                       (batch, seq, cfg.d_model)))
+
+
+def sds_token(cfg: ModelConfig, batch: int, sharder: Sharder):
+    return jax.ShapeDtypeStruct((batch, 1), jnp.int32,
+                                sharding=sharder.named(("batch", None),
+                                                       (batch, 1)))
+
+
+def sds_scalar(sharder: Sharder, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct((), dtype, sharding=sharder.replicated())

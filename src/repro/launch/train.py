@@ -1,0 +1,80 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 200 --reduced --batch 8 --seq 128
+
+On a real cluster each host runs this same entry point after
+``jax.distributed.initialize`` (flag --distributed); on a workstation it
+trains the reduced config on local devices.  The mesh adapts to whatever
+devices exist (elastic), model-parallel size via --tp.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.data.synthetic import SyntheticConfig, SyntheticLM
+from repro.launch.mesh import make_elastic_mesh
+from repro.models.transformer import Model
+from repro.parallel.sharding import make_sharder
+from repro.train.loop import TrainLoop, TrainLoopConfig
+from repro.train.optimizer import AdamW, cosine_schedule
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--tp", type=int, default=1, help="model-parallel size")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized variant of the arch")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--distributed", action="store_true",
+                    help="multi-host: call jax.distributed.initialize()")
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+
+    mesh = make_elastic_mesh(model_parallel=args.tp) \
+        if jax.device_count() > 1 else None
+    sharder = make_sharder(cfg, mesh)
+    model = Model(cfg, sharder)
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params on "
+          f"{jax.device_count()} device(s)"
+          + (f", mesh {dict(mesh.shape)}" if mesh else ""))
+
+    data = SyntheticLM(SyntheticConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch))
+    loop = TrainLoop(
+        model,
+        AdamW(cosine_schedule(args.lr, max(args.steps // 10, 1), args.steps)),
+        data,
+        TrainLoopConfig(total_steps=args.steps,
+                        checkpoint_every=args.ckpt_every,
+                        checkpoint_dir=args.ckpt_dir,
+                        microbatches=args.microbatches),
+        metrics_hook=lambda step, rec: print(
+            f"step {step:5d}  loss {rec['loss']:.4f}  "
+            f"{rec['time_s']*1e3:.0f} ms"
+            + ("  [STRAGGLER]" if rec["straggler"] else ""), flush=True),
+    )
+    final = loop.run(jax.random.PRNGKey(0))
+    print(f"done at step {final.step}")
+
+
+if __name__ == "__main__":
+    main()

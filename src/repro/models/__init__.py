@@ -1,0 +1,6 @@
+from repro.models.api import LayerSpec, ModelConfig, ParamDef, init_params, \
+    param_specs, param_shapes
+from repro.models.transformer import Model, model_defs
+
+__all__ = ["LayerSpec", "ModelConfig", "ParamDef", "init_params",
+           "param_specs", "param_shapes", "Model", "model_defs"]

@@ -1,0 +1,184 @@
+"""Model configuration & the ParamDef system.
+
+Every layer declares its parameters once as ``ParamDef``s (shape + logical
+axes + initializer); the same declaration drives initialization, sharding
+spec derivation (→ parallel.sharding), checkpoint naming and the dry-run's
+``ShapeDtypeStruct`` trees — so they cannot drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Layer specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer of the repeating pattern block."""
+    mixer: str          # "attn" | "attn_local" | "attn_bidir" | "mamba"
+    mlp: str            # "dense" | "moe" | "none"
+    cross_attn: bool = False   # decoder cross-attention (enc-dec models)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | vlm | audio | hybrid | ssm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    pattern: Tuple[LayerSpec, ...]          # repeats to num_layers
+    # attention details
+    window: Optional[int] = None            # for attn_local
+    attn_softcap: Optional[float] = None
+    logit_softcap: Optional[float] = None
+    rope_theta: float = 10_000.0
+    # MoE
+    num_experts: int = 0
+    num_experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_group_rows: int = 1          # rows merged per dispatch group
+    moe_impl: str = "auto"           # auto | gspmd | ep | cap | ffn
+    # per-arch sharding rule overrides: (("logical_axis", "mesh_axis"|None),…)
+    sharding_overrides: Tuple[Tuple[str, Any], ...] = ()
+    # Mamba-2 (SSD)
+    ssm_state: int = 0
+    mamba_head_dim: int = 64
+    mamba_expand: int = 2
+    mamba_conv: int = 4
+    # encoder-decoder
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_pattern: Tuple[LayerSpec, ...] = ()
+    # multimodal frontend stub
+    frontend: Optional[str] = None          # "vision" | "audio"
+    num_prefix_tokens: int = 0
+    # numerics / compile
+    norm_eps: float = 1.0e-6
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16               # compute dtype
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    attn_impl: str = "blockwise"            # dense | blockwise
+    attn_block_q: int = 512
+    attn_block_k: int = 512
+    vocab_pad_multiple: int = 256
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def d_inner(self) -> int:               # mamba inner width
+        return self.mamba_expand * self.d_model
+
+    @property
+    def mamba_heads(self) -> int:
+        return self.d_inner // self.mamba_head_dim
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def num_blocks(self) -> int:
+        assert self.num_layers % len(self.pattern) == 0, \
+            f"{self.num_layers} layers not a multiple of pattern {len(self.pattern)}"
+        return self.num_layers // len(self.pattern)
+
+    def param_count(self) -> int:
+        """Total parameters (exact, from the ParamDef tree)."""
+        from repro.models import transformer
+        defs = transformer.model_defs(self)
+        leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+        return int(sum(np.prod(d.shape) for d in leaves))
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: top-k of the experts)."""
+        if not self.num_experts:
+            return self.param_count()
+        from repro.models import transformer
+        defs = transformer.model_defs(self)
+        total = 0
+        for path, d in jax.tree_util.tree_flatten_with_path(
+                defs, is_leaf=lambda x: isinstance(x, ParamDef))[0]:
+            size = int(np.prod(d.shape))
+            if "experts" in d.axes:
+                e_axis = d.shape[d.axes.index("experts")]
+                size = size // e_axis * self.num_experts_per_token
+            total += size
+        return total
+
+
+# ---------------------------------------------------------------------------
+# ParamDef machinery
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]        # logical axis names
+    init: str = "normal"                   # normal | zeros | ones | embed | scale
+    scale_dim: Optional[int] = None        # fan-in override for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_leaf(key: jax.Array, d: ParamDef, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "scale":          # RMSNorm-style: zeros, applied as (1 + s)
+        return jnp.zeros(d.shape, dtype)
+    fan_in = d.scale_dim if d.scale_dim is not None else d.shape[0]
+    if d.init == "embed":
+        fan_in = d.shape[-1]   # (vocab, d_model): unit-scale after ·√d input mult
+    std = 1.0 / float(np.sqrt(max(fan_in, 1)))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(rng: jax.Array, defs, dtype) -> Dict:
+    """Materialize a ParamDef tree (deterministic per-path RNG folding)."""
+    flat = jax.tree_util.tree_flatten_with_path(defs, is_leaf=_is_def)[0]
+    treedef = jax.tree.structure(defs, is_leaf=_is_def)
+    leaves = []
+    for path, d in flat:
+        path_str = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        key = jax.random.fold_in(rng, abs(hash(path_str)) % (2 ** 31))
+        leaves.append(_init_leaf(key, d, dtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def param_specs(defs) -> Dict:
+    """Logical-axes tree with the same structure as the params."""
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+def param_shapes(defs, dtype) -> Dict:
+    """ShapeDtypeStruct tree (for eval_shape-free dry runs)."""
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+                        defs, is_leaf=_is_def)
+
+
+def stack_defs(defs, n: int, axis_name: Optional[str] = "layers") -> Dict:
+    """Prepend a stacking dimension (for lax.scan over layer blocks)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init,
+                           d.scale_dim if d.scale_dim is not None
+                           else (d.shape[0] if d.init == "normal" else None)),
+        defs, is_leaf=_is_def)

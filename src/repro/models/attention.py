@@ -1,0 +1,256 @@
+"""GQA attention: dense & interest-managed blockwise paths, KV caches.
+
+The *blockwise* path is the training/prefill workhorse: the DDM matching
+engine (repro.core via kernels.ops.build_block_structure) produces the
+static per-query-block KV schedule; a double ``lax.scan`` streams KV blocks
+through an online softmax.  Same algorithm as the Pallas kernel — which is
+the TPU serving path — but differentiable and lowerable on every backend,
+so the multi-pod dry-run exercises the same sparsity structure the kernel
+executes on hardware.
+
+Decode reads the whole cache with a position mask; with the cache's seq axis
+sharded, XLA turns the contraction into split-KV partial attention + a
+softmax-merge collective (flash-decoding across chips).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.ops import build_block_structure
+from repro.models.api import ModelConfig, ParamDef
+from repro.models.common import rope
+
+NEG_INF = -1.0e30
+
+
+def attn_defs(cfg: ModelConfig, cross: bool = False):
+    h, kv, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", "head_dim"), "normal"),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim"), "normal"),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim"), "normal"),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "embed"), "normal",
+                       scale_dim=h * hd),
+    }
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # (B, Hkv, Smax, hd)
+    v: jax.Array
+    length: jax.Array  # () int32 — tokens filled so far
+
+
+def _split_heads(q, k, v, num_kv: int):
+    """(B,H,S,hd) → (B,Hkv,G,S,hd) query, kv stay (B,Hkv,S,hd)."""
+    b, h, s, hd = q.shape
+    g = h // num_kv
+    return q.reshape(b, num_kv, g, s, hd)
+
+
+def _merge_heads(o5):
+    b, kvh, g, s, hd = o5.shape
+    return o5.reshape(b, kvh * g, s, hd)
+
+
+def _token_mask(q_pos, k_pos, *, causal, window, q_seg=None, k_seg=None):
+    mask = jnp.ones(jnp.broadcast_shapes(q_pos.shape, k_pos.shape), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    if q_seg is not None:
+        mask &= q_seg == k_seg
+    return mask
+
+
+def dense_attention(q, k, v, *, scale, causal, window, softcap,
+                    q_offset: int = 0, q_segments=None, kv_segments=None):
+    """(B,H,Sq,hd) × (B,Hkv,Skv,hd) reference-path attention (small shapes)."""
+    b, h, sq, hd = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    q5 = _split_heads(q, k, v, kvh).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", q5, k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = (jnp.arange(sq) + q_offset)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = _token_mask(q_pos, k_pos, causal=causal, window=window)
+    if q_segments is not None:
+        seg = q_segments[:, :, None] == kv_segments[:, None, :]  # (B,Sq,Skv)
+        mask = mask[None] & seg
+        mask = mask[:, None, None]       # (B,1,1,Sq,Skv)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return _merge_heads(o).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, *, scale, causal, window, softcap,
+                        block_q: int, block_k: int, q_offset: int = 0,
+                        num_global_blocks: int = 0,
+                        q_segments=None, kv_segments=None):
+    """Interest-managed blockwise attention (pure JAX, differentiable).
+
+    The static block schedule comes from DDM matching over interest extents;
+    unmatched KV blocks are never touched, so cost is O(matched blocks).
+    """
+    b, h, sq, hd = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    if sq % block_q or skv % block_k:
+        return dense_attention(q, k, v, scale=scale, causal=causal,
+                               window=window, softcap=softcap,
+                               q_offset=q_offset, q_segments=q_segments,
+                               kv_segments=kv_segments)
+    kv_index, kv_count, _ = build_block_structure(
+        sq, skv, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, num_global_blocks=num_global_blocks)
+    nq, max_nk = kv_index.shape
+    kv_index = jnp.asarray(kv_index)
+    kv_count = jnp.asarray(kv_count)
+    q5 = _split_heads(q, k, v, kvh).astype(jnp.float32)
+    q5 = q5.reshape(b, kvh, g, nq, block_q, hd).swapaxes(0, 3)  # (nq,kvh,g,b,bq,hd)
+    if q_segments is None:
+        q_seg = jnp.zeros((b, sq), jnp.int32)
+        k_seg = jnp.zeros((b, skv), jnp.int32)
+    else:
+        q_seg, k_seg = q_segments, kv_segments
+    q_seg = q_seg.reshape(b, nq, block_q).swapaxes(0, 1)         # (nq,b,bq)
+
+    def q_block(carry, inp):
+        qi, idxs, cnt, qblk, qsegs = inp      # per-q-block inputs
+
+        def kv_step(state, t):
+            m, l, acc = state
+            kblk = idxs[t]
+            kj = lax.dynamic_slice_in_dim(k, kblk * block_k, block_k, axis=2)
+            vj = lax.dynamic_slice_in_dim(v, kblk * block_k, block_k, axis=2)
+            s = jnp.einsum("kgbqd,bksd->kgbqs", qblk,
+                           kj.astype(jnp.float32)) * scale
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            q_pos = (q_offset + qi * block_q + jnp.arange(block_q))[:, None]
+            k_pos = (kblk * block_k + jnp.arange(block_k))[None, :]
+            mask = _token_mask(q_pos, k_pos, causal=causal, window=window)
+            ksegs = lax.dynamic_slice_in_dim(k_seg, kblk * block_k, block_k,
+                                             axis=1)
+            seg_ok = qsegs[:, :, None] == ksegs[:, None, :]       # (b,bq,bk)
+            mask = mask[None, None, None] & seg_ok[None, None]    # (1,1,b,bq,bk)
+            mask = mask & (t < cnt)                               # padded slot
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("kgbqs,bksd->kgbqd", p, vj.astype(jnp.float32))
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((kvh, g, b, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((kvh, g, b, block_q), jnp.float32)
+        a0 = jnp.zeros((kvh, g, b, block_q, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                  jnp.arange(max_nk, dtype=jnp.int32))
+        safe = jnp.where(l > 0, l, 1.0)
+        out = acc / safe[..., None]                                # (kvh,g,b,bq,hd)
+        return carry, out
+
+    _, outs = lax.scan(q_block, (), (
+        jnp.arange(nq, dtype=jnp.int32), kv_index, kv_count, q5, q_seg))
+    # outs: (nq, kvh, g, b, bq, hd) → (b, h, sq, hd)
+    o = outs.transpose(3, 1, 2, 0, 4, 5).reshape(b, kvh, g, sq, hd)
+    return _merge_heads(o).astype(q.dtype)
+
+
+def attention_layer(params, x, cfg: ModelConfig, sharder, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    positions: Optional[jax.Array] = None,
+                    segments: Optional[jax.Array] = None,
+                    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    cache: Optional[KVCache] = None,
+                    num_global_blocks: int = 0):
+    """Full attention sub-layer (projections + core + output).
+
+    * train/prefill: pass ``positions`` (B, S); returns (out, new_cache|None).
+    * decode: pass ``cache`` and x of shape (B, 1, D).
+    * cross-attention: pass ``kv_override`` = encoder (k, v) heads.
+    """
+    b, s, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    scale = hd ** -0.5
+    dt = cfg.dtype
+
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"].astype(dt))
+    q = sharder.constrain(q, ("batch", "heads", None, None))
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"].astype(dt))
+        k = sharder.constrain(k, ("batch", "kv_heads", None, None))
+        v = sharder.constrain(v, ("batch", "kv_heads", None, None))
+        if positions is not None:
+            q = rope(q.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+            k = rope(k.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+    else:
+        k, v = kv_override
+
+    new_cache = None
+    if cache is not None and kv_override is None:
+        if s == 1:
+            # decode: append this token's kv at position `length`
+            pos = cache.length
+            ck = lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
+                                                 pos, axis=2)
+            cv = lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
+                                                 pos, axis=2)
+            new_cache = KVCache(ck, cv, pos + 1)
+            smax = ck.shape[2]
+            k_pos = jnp.arange(smax)[None, :]
+            q_pos = jnp.full((1, 1), pos, jnp.int32) + 0
+            mask = _token_mask(q_pos, k_pos, causal=True, window=window)
+            q5 = _split_heads(q, ck, cv, kvh).astype(jnp.float32)
+            sc = jnp.einsum("bkgqd,bksd->bkgqs", q5,
+                            ck.astype(jnp.float32)) * scale
+            if cfg.attn_softcap:
+                sc = cfg.attn_softcap * jnp.tanh(sc / cfg.attn_softcap)
+            sc = jnp.where(mask, sc, NEG_INF)
+            p = jax.nn.softmax(sc, axis=-1)
+            o = jnp.einsum("bkgqs,bksd->bkgqd", p, cv.astype(jnp.float32))
+            o = _merge_heads(o).astype(dt)
+            out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"].astype(dt))
+            return sharder.constrain(out, ("batch", None, None)), new_cache
+        else:
+            # prefill: write the whole prefix
+            ck = lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), 0, axis=2)
+            cv = lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), 0, axis=2)
+            new_cache = KVCache(ck, cv, jnp.int32(s))
+
+    if cfg.attn_impl == "dense" or s <= cfg.attn_block_q:
+        o = dense_attention(q, k, v, scale=scale, causal=causal,
+                            window=window, softcap=cfg.attn_softcap,
+                            q_segments=segments, kv_segments=segments)
+    else:
+        o = blockwise_attention(
+            q, k, v, scale=scale, causal=causal, window=window,
+            softcap=cfg.attn_softcap, block_q=cfg.attn_block_q,
+            block_k=cfg.attn_block_k, num_global_blocks=num_global_blocks,
+            q_segments=segments, kv_segments=segments)
+    o = sharder.constrain(o, ("batch", "heads", None, None))
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"].astype(dt))
+    return sharder.constrain(out, ("batch", None, None)), new_cache
+
+
+def make_cross_kv(params, enc_out: jax.Array, cfg: ModelConfig, sharder):
+    """Precompute cross-attention K/V from encoder output (cached once)."""
+    dt = cfg.dtype
+    k = jnp.einsum("bsd,dhk->bhsk", enc_out, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bhsk", enc_out, params["wv"].astype(dt))
+    k = sharder.constrain(k, ("batch", "kv_heads", None, None))
+    v = sharder.constrain(v, ("batch", "kv_heads", None, None))
+    return k, v

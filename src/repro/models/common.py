@@ -1,0 +1,91 @@
+"""Shared layers: RMSNorm, RoPE, embeddings, projections."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelConfig, ParamDef
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(d: int):
+    return {"scale": ParamDef((d,), (None,), "scale")}
+
+
+def rmsnorm(params, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) rotated pairwise; positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    angles = angles[..., None, :]                             # (..., S, 1, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (padded vocab, TP over vocab)
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg: ModelConfig):
+    d = {"embedding": ParamDef((cfg.padded_vocab, cfg.d_model),
+                               ("vocab", "embed"), "embed")}
+    if not cfg.tie_embeddings:
+        d["lm_head"] = ParamDef((cfg.d_model, cfg.padded_vocab),
+                                ("embed", "vocab"), "normal",
+                                scale_dim=cfg.d_model)
+    return d
+
+
+def embed_tokens(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = params["embedding"].astype(cfg.dtype)[tokens]
+    return x
+
+
+def unembed(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Logits over the *padded* vocab; padding columns masked to -1e30."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x,
+                            params["embedding"].astype(cfg.dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x,
+                            params["lm_head"].astype(cfg.dtype))
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1.0e30)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE (f32); labels < 0 are ignored."""
+    valid = labels >= 0
+    if mask is not None:
+        valid = valid & (mask > 0)
+    safe_labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)

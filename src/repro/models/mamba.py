@@ -1,0 +1,214 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD: within a chunk the recurrence is computed as a masked
+attention-like quadratic form (MXU-friendly); across chunks the scalar-decay
+state is passed through a ``lax.scan`` — an exclusive prefix computation
+with ⊕ = (decay, accumulate), i.e. the same two-level scan substrate the
+paper's sweep uses (core/prefix.py), just over a different monoid.
+
+Recurrence (per head, state N × head_dim P):
+    h_t = a_t · h_{t-1} + Δt_t · B_t ⊗ x_t        a_t = exp(Δt_t · A)
+    y_t = C_t · h_t + D · x_t
+Simplifications vs the released model: n_groups = 1 (B/C shared across
+heads), no bias terms.  Decode keeps (h, conv window) as explicit state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.api import ModelConfig, ParamDef
+from repro.models.common import rmsnorm
+
+CHUNK = 128
+
+
+def mamba_defs(cfg: ModelConfig):
+    d, hm, p, n = cfg.d_model, cfg.mamba_heads, cfg.mamba_head_dim, cfg.ssm_state
+    k = cfg.mamba_conv
+    return {
+        # fused input projections (§Perf: each separate projection einsum
+        # produced its own (b,s,d) dx-psum in backward — 5 per layer):
+        #   w_zx  — z and x side-by-side per head (head-TP aligned slices)
+        #   w_bcdt — B ‖ C ‖ Δt (small, replicated)
+        "w_zx": ParamDef((d, hm, 2 * p), ("embed", "mamba_heads", None),
+                         "normal"),
+        "w_bcdt": ParamDef((d, 2 * n + hm), ("embed", None), "normal"),
+        "dt_bias": ParamDef((hm,), ("mamba_heads",), "zeros"),
+        "A_log": ParamDef((hm,), ("mamba_heads",), "zeros"),
+        "D_skip": ParamDef((hm,), ("mamba_heads",), "ones"),
+        "conv_x": ParamDef((k, hm, p), ("conv", "mamba_heads", None), "normal",
+                           scale_dim=k),
+        "conv_B": ParamDef((k, n), ("conv", "mamba_state"), "normal",
+                           scale_dim=k),
+        "conv_C": ParamDef((k, n), ("conv", "mamba_state"), "normal",
+                           scale_dim=k),
+        "norm_scale": ParamDef((hm, p), ("mamba_heads", None), "scale"),
+        "w_out": ParamDef((hm, p, d), ("mamba_heads", None, "embed"), "normal",
+                          scale_dim=hm * p),
+    }
+
+
+class MambaState(NamedTuple):
+    h: jax.Array          # (B, Hm, N, P) ssm state
+    conv_x: jax.Array     # (B, K-1, Hm, P) pre-conv history
+    conv_B: jax.Array     # (B, K-1, N)
+    conv_C: jax.Array     # (B, K-1, N)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, history: Optional[jax.Array]):
+    """Depthwise causal conv along axis 1.  x: (B, S, ...), w: (K, ...)."""
+    k = w.shape[0]
+    if history is None:
+        pad = jnp.zeros_like(x[:, :1]).repeat(k - 1, axis=1)
+    else:
+        pad = history.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_hist = xp[:, x.shape[1]:]     # last k-1 inputs
+    return out, new_hist
+
+
+def _ssd_chunked(xh, dt, a_log, bmat, cmat, h0, sharder=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,Hm,P) Δ-scaled inputs NOT yet applied; dt: (B,S,Hm);
+    bmat/cmat: (B,S,N).  Returns (y (B,S,Hm,P), h_final (B,Hm,N,P)).
+
+    The head-dim constraints keep GSPMD from replicating the (L, L, Hm)
+    intra-chunk quadratics in the backward pass (measured: without them the
+    bwd all-reduces decay-shaped f32 tensors — dozens of GB per block on
+    the jamba-398B train cell).
+    """
+    b, s, hm, p = xh.shape
+    n = bmat.shape[-1]
+    L = min(CHUNK, s)
+    nc = s // L
+    assert s % L == 0, f"{s=} not a multiple of chunk {L}"
+
+    def con(t, axes):
+        return sharder.constrain(t, axes) if sharder is not None else t
+
+    A = -jnp.exp(a_log.astype(jnp.float32))                  # (Hm,) negative
+    dt = dt.astype(jnp.float32)
+    loga = dt * A                                            # (B,S,Hm) ≤ 0
+    dtx = (dt[..., None] * xh.astype(jnp.float32))           # (B,S,Hm,P)
+
+    loga = loga.reshape(b, nc, L, hm)
+    dtx = con(dtx.reshape(b, nc, L, hm, p),
+              ("batch", None, None, "mamba_heads", None))
+    bm = bmat.astype(jnp.float32).reshape(b, nc, L, n)
+    cm = cmat.astype(jnp.float32).reshape(b, nc, L, n)
+    cs = con(jnp.cumsum(loga, axis=2),                       # (B,nc,L,Hm)
+             ("batch", None, None, "mamba_heads"))
+
+    # intra-chunk (quadratic, causal-masked)
+    decay = jnp.exp(cs[:, :, :, None] - cs[:, :, None])      # (B,nc,L,L,Hm)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    decay = con(decay, ("batch", None, None, None, "mamba_heads"))
+    g = jnp.einsum("bcln,bcmn->bclm", cm, bm)                # (B,nc,L,L)
+    y_intra = jnp.einsum("bclm,bclmh,bcmhp->bclhp", g, decay, dtx)
+    y_intra = con(y_intra, ("batch", None, None, "mamba_heads", None))
+
+    # per-chunk state contribution + decay
+    last = cs[:, :, -1:, :]                                  # (B,nc,1,Hm)
+    state_w = jnp.exp(last - cs)                             # (B,nc,L,Hm)
+    chunk_state = jnp.einsum("bclh,bcln,bclhp->bchnp", state_w, bm, dtx)
+    chunk_decay = jnp.exp(last[:, :, 0])                     # (B,nc,Hm)
+
+    def step(h, inp):
+        c_state, c_decay, c_cm, c_cs = inp
+        y_inter = jnp.einsum("bln,bhnp,blh->blhp", c_cm, h, jnp.exp(c_cs))
+        h_new = c_decay[:, :, None, None] * h + c_state
+        return h_new, y_inter
+
+    h_final, y_inter = lax.scan(
+        step, h0.astype(jnp.float32),
+        (chunk_state.swapaxes(0, 1), chunk_decay.swapaxes(0, 1),
+         cm.swapaxes(0, 1), cs.swapaxes(0, 1)))
+    y_inter = y_inter.swapaxes(0, 1).reshape(b, nc, L, hm, p)
+    y = (y_intra + y_inter).reshape(b, s, hm, p)
+    return y, h_final
+
+
+def mamba_layer(params, x: jax.Array, cfg: ModelConfig, sharder, *,
+                state: Optional[MambaState] = None
+                ) -> Tuple[jax.Array, Optional[MambaState]]:
+    """x: (B, S, D).  state given → stateful (prefill s>1 or decode s==1)."""
+    dt_ = cfg.dtype
+    b, s, d = x.shape
+    hm, p, n = cfg.mamba_heads, cfg.mamba_head_dim, cfg.ssm_state
+
+    zx = jnp.einsum("bsd,dhq->bshq", x, params["w_zx"].astype(dt_))
+    zx = sharder.constrain(zx, ("batch", None, "mamba_heads", None))
+    z, xin = zx[..., :p], zx[..., p:]
+    bcdt = jnp.einsum("bsd,dq->bsq", x, params["w_bcdt"].astype(dt_))
+    bproj = bcdt[..., :n]
+    cproj = bcdt[..., n:2 * n]
+    dt_raw = bcdt[..., 2 * n:]
+
+    hx = state.conv_x if state is not None else None
+    hb = state.conv_B if state is not None else None
+    hc = state.conv_C if state is not None else None
+    xin, nhx = _causal_conv(xin, params["conv_x"].astype(dt_), hx)
+    bproj, nhb = _causal_conv(bproj, params["conv_B"].astype(dt_), hb)
+    cproj, nhc = _causal_conv(cproj, params["conv_C"].astype(dt_), hc)
+    xin = jax.nn.silu(xin)
+    bproj = jax.nn.silu(bproj)
+    cproj = jax.nn.silu(cproj)
+    dt_soft = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                              + params["dt_bias"].astype(jnp.float32))
+
+    h0 = state.h if state is not None else jnp.zeros((b, hm, n, p), jnp.float32)
+
+    if s == 1:
+        # decode: exact single-step recurrence
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))
+        a = jnp.exp(dt_soft[:, 0] * A)                          # (B,Hm)
+        dbx = jnp.einsum("bh,bn,bhp->bhnp", dt_soft[:, 0],
+                         bproj[:, 0].astype(jnp.float32),
+                         xin[:, 0].astype(jnp.float32))
+        h = a[:, :, None, None] * h0.astype(jnp.float32) + dbx
+        y = jnp.einsum("bn,bhnp->bhp", cproj[:, 0].astype(jnp.float32), h)
+        y = y[:, None]                                          # (B,1,Hm,P)
+        h_final = h
+    else:
+        pad = (-s) % min(CHUNK, s)   # only pad up to a chunk multiple
+        if pad:
+            def padit(t):
+                return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+            y, h_final = _ssd_chunked(padit(xin), padit(dt_soft),
+                                      params["A_log"], padit(bproj),
+                                      padit(cproj), h0, sharder)
+            y = y[:, :s]
+        else:
+            y, h_final = _ssd_chunked(xin, dt_soft, params["A_log"],
+                                      bproj, cproj, h0, sharder)
+
+    y = y + params["D_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xin.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)    # gate
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    out = jnp.einsum("bshp,hpd->bsd", y, params["w_out"].astype(dt_))
+    out = sharder.constrain(out, ("batch", None, None))
+
+    new_state = None
+    if state is not None:
+        new_state = MambaState(h_final.astype(state.h.dtype), nhx, nhb, nhc)
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                     ) -> MambaState:
+    hm, p, n, k = (cfg.mamba_heads, cfg.mamba_head_dim, cfg.ssm_state,
+                   cfg.mamba_conv)
+    return MambaState(
+        h=jnp.zeros((batch, hm, n, p), dtype),
+        conv_x=jnp.zeros((batch, k - 1, hm, p), dtype),
+        conv_B=jnp.zeros((batch, k - 1, n), dtype),
+        conv_C=jnp.zeros((batch, k - 1, n), dtype),
+    )

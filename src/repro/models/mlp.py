@@ -1,0 +1,29 @@
+"""Dense gated MLPs (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelConfig, ParamDef
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_gate": ParamDef((d, f), ("embed", "ffn"), "normal"),
+        "w_up": ParamDef((d, f), ("embed", "ffn"), "normal"),
+        "w_down": ParamDef((f, d), ("ffn", "embed"), "normal"),
+    }
+
+
+def mlp(params, x: jax.Array, cfg: ModelConfig, sharder,
+        activation: str = "silu") -> jax.Array:
+    dt = cfg.dtype
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+    g = sharder.constrain(g, ("batch", None, "ffn"))
+    act = jax.nn.silu if activation == "silu" else \
+        (lambda t: jax.nn.gelu(t, approximate=True))
+    h = act(g) * u
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dt))
+    return sharder.constrain(out, ("batch", None, None))

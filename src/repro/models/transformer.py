@@ -1,0 +1,306 @@
+"""The unified model: pattern-block transformer covering all ten assigned
+architectures (dense / MoE / local-global / hybrid Mamba / pure SSM /
+enc-dec / multimodal-stub).
+
+A model is ``num_blocks`` repetitions of a *pattern block* (tuple of
+LayerSpecs).  Blocks are homogeneous, so parameters are stacked on a leading
+``layers`` axis and the stack runs under ``lax.scan`` — which keeps the HLO
+O(pattern) instead of O(num_layers) and is what makes the 512-device
+dry-runs of 64–72-layer models compile quickly.  Per-layer state (KV caches,
+Mamba states) is stacked the same way and threaded through the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models.api import LayerSpec, ModelConfig, ParamDef, init_params, \
+    param_specs, stack_defs
+from repro.models.attention import KVCache
+from repro.models.common import (cross_entropy, embed_defs, embed_tokens,
+                                 rmsnorm, rmsnorm_defs, unembed)
+from repro.parallel.sharding import Sharder
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def _sublayer_defs(cfg: ModelConfig, spec: LayerSpec):
+    d: Dict[str, Any] = {"norm_mixer": rmsnorm_defs(cfg.d_model)}
+    if spec.mixer.startswith("attn"):
+        d["mixer"] = attn_lib.attn_defs(cfg)
+    elif spec.mixer == "mamba":
+        d["mixer"] = mamba_lib.mamba_defs(cfg)
+    else:
+        raise ValueError(f"unknown mixer {spec.mixer!r}")
+    if spec.cross_attn:
+        d["norm_cross"] = rmsnorm_defs(cfg.d_model)
+        d["cross"] = attn_lib.attn_defs(cfg, cross=True)
+    if spec.mlp == "dense":
+        d["norm_mlp"] = rmsnorm_defs(cfg.d_model)
+        d["mlp"] = mlp_lib.mlp_defs(cfg)
+    elif spec.mlp == "moe":
+        d["norm_mlp"] = rmsnorm_defs(cfg.d_model)
+        d["mlp"] = moe_lib.moe_defs(cfg)
+    elif spec.mlp != "none":
+        raise ValueError(f"unknown mlp {spec.mlp!r}")
+    return d
+
+
+def block_defs(cfg: ModelConfig, pattern: Tuple[LayerSpec, ...]):
+    return {f"layer{i}": _sublayer_defs(cfg, s) for i, s in enumerate(pattern)}
+
+
+def model_defs(cfg: ModelConfig):
+    defs: Dict[str, Any] = {
+        "embed": embed_defs(cfg),
+        "final_norm": rmsnorm_defs(cfg.d_model),
+        "blocks": stack_defs(block_defs(cfg, cfg.pattern), cfg.num_blocks),
+    }
+    if cfg.is_encoder_decoder:
+        n_enc_blocks = cfg.num_encoder_layers // len(cfg.encoder_pattern)
+        defs["enc_blocks"] = stack_defs(
+            block_defs(cfg, cfg.encoder_pattern), n_enc_blocks)
+        defs["enc_final_norm"] = rmsnorm_defs(cfg.d_model)
+    if cfg.frontend is not None:
+        defs["frontend_proj"] = ParamDef(
+            (cfg.d_model, cfg.d_model), ("embed", None), "normal")
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Pattern-block application
+# ---------------------------------------------------------------------------
+
+def _apply_block(cfg: ModelConfig, sharder: Sharder,
+                 pattern: Tuple[LayerSpec, ...],
+                 params_block, x, positions, segments,
+                 caches=None, enc_out=None, decode: bool = False):
+    """One pattern block; returns (x, new_caches, aux_sum)."""
+    aux = jnp.zeros((2,), jnp.float32)   # [moe_aux, moe_z]
+    new_caches: Dict[str, Any] = {}
+    for i, spec in enumerate(pattern):
+        sub = params_block[f"layer{i}"]
+        h = rmsnorm(sub["norm_mixer"], x, cfg.norm_eps)
+        cache_i = caches.get(f"layer{i}") if caches is not None else None
+        if spec.mixer.startswith("attn"):
+            causal = spec.mixer != "attn_bidir"
+            window = cfg.window if spec.mixer == "attn_local" else None
+            o, nc = attn_lib.attention_layer(
+                sub["mixer"], h, cfg, sharder, causal=causal, window=window,
+                positions=positions, segments=segments, cache=cache_i)
+        else:
+            o, nc = mamba_lib.mamba_layer(sub["mixer"], h, cfg, sharder,
+                                          state=cache_i)
+        if nc is not None:
+            new_caches[f"layer{i}"] = nc
+        x = x + o
+        if spec.cross_attn:
+            assert enc_out is not None, "cross-attention needs encoder output"
+            h = rmsnorm(sub["norm_cross"], x, cfg.norm_eps)
+            kv = attn_lib.make_cross_kv(sub["cross"], enc_out, cfg, sharder)
+            o, _ = attn_lib.attention_layer(
+                sub["cross"], h, cfg, sharder, causal=False,
+                positions=None, kv_override=kv)
+            x = x + o
+        if spec.mlp == "dense":
+            h = rmsnorm(sub["norm_mlp"], x, cfg.norm_eps)
+            x = x + mlp_lib.mlp(sub["mlp"], h, cfg, sharder)
+        elif spec.mlp == "moe":
+            h = rmsnorm(sub["norm_mlp"], x, cfg.norm_eps)
+            o, moe_aux = moe_lib.moe_layer(sub["mlp"], h, cfg, sharder)
+            aux = aux + jnp.stack([moe_aux["moe_aux_loss"],
+                                   moe_aux["moe_z_loss"]])
+            x = x + o
+    return x, new_caches, aux
+
+
+def _run_stack(cfg: ModelConfig, sharder: Sharder, pattern,
+               stacked_params, x, positions, segments,
+               stacked_caches=None, enc_out=None, scan: bool = True,
+               remat: bool = False):
+    """Run all blocks (scan over the stacked leading axis)."""
+
+    def block_fn(x, block_params, caches):
+        return _apply_block(cfg, sharder, pattern, block_params, x,
+                            positions, segments, caches=caches,
+                            enc_out=enc_out)
+
+    if remat:
+        block_fn = jax.checkpoint(block_fn)
+
+    if scan:
+        def scan_body(carry, xs):
+            x, aux = carry
+            if stacked_caches is None:
+                bp = xs
+                x, _, a = block_fn(x, bp, None)
+                return (x, aux + a), None
+            bp, caches = xs
+            x, nc, a = block_fn(x, bp, caches)
+            return (x, aux + a), nc
+
+        xs = stacked_params if stacked_caches is None else (
+            stacked_params, stacked_caches)
+        (x, aux), new_caches = lax.scan(scan_body,
+                                        (x, jnp.zeros((2,), jnp.float32)), xs)
+        return x, new_caches, aux
+
+    aux = jnp.zeros((2,), jnp.float32)
+    n_blocks = jax.tree.leaves(stacked_params)[0].shape[0]
+    new_stacked = []
+    for bi in range(n_blocks):
+        bp = jax.tree.map(lambda t: t[bi], stacked_params)
+        caches = None if stacked_caches is None else jax.tree.map(
+            lambda t: t[bi], stacked_caches)
+        x, nc, a = block_fn(x, bp, caches)
+        aux = aux + a
+        new_stacked.append(nc)
+    new_caches = None
+    if stacked_caches is not None:
+        new_caches = jax.tree.map(lambda *ts: jnp.stack(ts), *new_stacked)
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# The model facade
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Pure-function model facade: holds static config + sharder only."""
+
+    cfg: ModelConfig
+    sharder: Sharder = dataclasses.field(default_factory=Sharder)
+    scan_layers: bool = True
+
+    # -- params ------------------------------------------------------------
+    def defs(self):
+        return model_defs(self.cfg)
+
+    def init(self, rng: jax.Array):
+        return init_params(rng, self.defs(), self.cfg.param_dtype)
+
+    def specs(self):
+        return param_specs(self.defs())
+
+    # -- embedding front ----------------------------------------------------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+        if cfg.frontend == "vision":
+            pe = batch["prefix_embeds"].astype(cfg.dtype)
+            pe = jnp.einsum("bpd,de->bpe", pe,
+                            params["frontend_proj"].astype(cfg.dtype))
+            x = jnp.concatenate([pe, x], axis=1)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+        return self.sharder.constrain(x, ("batch", None, None))
+
+    def _encode(self, params, batch):
+        cfg = self.cfg
+        enc_in = batch["frame_embeds"].astype(cfg.dtype)
+        if cfg.frontend == "audio":
+            enc_in = jnp.einsum("bsd,de->bse", enc_in,
+                                params["frontend_proj"].astype(cfg.dtype))
+        s = enc_in.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s), enc_in.shape[:2])
+        x, _, _ = _run_stack(
+            cfg, self.sharder, cfg.encoder_pattern, params["enc_blocks"],
+            enc_in, positions, None, scan=self.scan_layers, remat=cfg.remat)
+        return rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+    # -- training forward ----------------------------------------------------
+    def forward(self, params, batch):
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        s = x.shape[1]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s), x.shape[:2])
+        segments = batch.get("segments")
+        enc_out = self._encode(params, batch) if cfg.is_encoder_decoder else None
+        x, _, aux = _run_stack(
+            cfg, self.sharder, cfg.pattern, params["blocks"], x, positions,
+            segments, enc_out=enc_out, scan=self.scan_layers, remat=cfg.remat)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg)
+        return logits, aux
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        ce = cross_entropy(logits, batch["labels"])
+        total = ce + 0.01 * aux[0] + 0.001 * aux[1]
+        return total, {"ce": ce, "moe_aux": aux[0], "moe_z": aux[1]}
+
+    # -- serving -------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        """Stacked per-block cache pytree (dtype = compute dtype)."""
+        cfg = self.cfg
+        nb = cfg.num_blocks
+
+        def one(spec: LayerSpec):
+            if spec.mixer.startswith("attn"):
+                shape = (nb, batch, cfg.num_kv_heads, max_len, cfg.head_dim)
+                return KVCache(jnp.zeros(shape, cfg.dtype),
+                               jnp.zeros(shape, cfg.dtype),
+                               jnp.zeros((nb,), jnp.int32))
+            st = mamba_lib.init_mamba_state(cfg, batch, jnp.float32)
+            return jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (nb,) + t.shape), st)
+
+        return {f"layer{i}": one(s) for i, s in enumerate(cfg.pattern)}
+
+    def cache_spec_axes(self) -> Any:
+        """Logical axes for every cache leaf (structural, mirrors init_cache)."""
+        def one(spec: LayerSpec):
+            if spec.mixer.startswith("attn"):
+                kv_axes = ("layers", "batch", "kv_heads", None, None)
+                return KVCache(kv_axes, kv_axes, ("layers",))
+            return mamba_lib.MambaState(
+                h=("layers", "batch", "mamba_heads", None, None),
+                conv_x=("layers", "batch", None, "mamba_heads", None),
+                conv_B=("layers", "batch", None, None),
+                conv_C=("layers", "batch", None, None),
+            )
+        return {f"layer{i}": one(s) for i, s in enumerate(self.cfg.pattern)}
+
+    def prefill(self, params, batch, cache):
+        """Fill caches from a token prefix; returns (cache, last_logits)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s), x.shape[:2])
+        enc_out = self._encode(params, batch) if cfg.is_encoder_decoder else None
+        x, new_caches, _ = _run_stack(
+            cfg, self.sharder, cfg.pattern, params["blocks"], x, positions,
+            None, stacked_caches=cache, enc_out=enc_out,
+            scan=self.scan_layers)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], x[:, -1:], cfg)
+        return new_caches, logits
+
+    def decode_step(self, params, token, cache, pos, enc_out=None):
+        """One decode step.  token: (B, 1) int32; pos: () int32."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], token, cfg)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+        positions = jnp.broadcast_to(pos, token.shape).astype(jnp.int32)
+        if cfg.is_encoder_decoder and enc_out is None:
+            raise ValueError("enc-dec decode needs enc_out")
+        x, new_caches, _ = _run_stack(
+            cfg, self.sharder, cfg.pattern, params["blocks"], x, positions,
+            None, stacked_caches=cache, enc_out=enc_out,
+            scan=self.scan_layers)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg)
+        return new_caches, logits

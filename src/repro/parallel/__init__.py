@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (DEFAULT_RULES, Sharder, make_sharder,
+                                     rules_for_config, tree_named_shardings)
+
+__all__ = ["DEFAULT_RULES", "Sharder", "make_sharder", "rules_for_config",
+           "tree_named_shardings"]

@@ -1,0 +1,149 @@
+"""Logical-axis sharding: one rule table maps model-semantic axes to mesh
+axes; every parameter and activation names its axes once and the Sharder
+turns them into PartitionSpecs / sharding constraints.
+
+Mesh convention (launch/mesh.py):
+  single-pod:  (16, 16)        axes ("data", "model")
+  multi-pod:   (2, 16, 16)     axes ("pod", "data", "model")   (pod = DCN)
+
+Parallelism coverage:
+  DP  — "batch" over ("pod", "data")
+  TP  — "heads"/"kv_heads"/"ffn"/"vocab"/"mamba_heads" over "model"
+  EP  — "experts" over "model" when the expert count divides the axis,
+        otherwise expert-ffn TP ("expert_ffn" → "model")
+  SP  — "seq_shard" rule available for sequence/context parallelism
+        (hillclimb track for archs whose head counts don't divide 16)
+
+Unaligned dims (e.g. 24 heads over 16 shards) are legal — GSPMD pads — and
+the padding waste is measured in the roofline report rather than hidden.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": "model",      # opt-in sequence parallelism
+    # "embed" is the d_model dim of weight matrices: sharding it over the
+    # data axis gives 2-D (data × model) fully-sharded parameters and
+    # optimizer state — ZeRO-3/FSDP semantics via GSPMD (the all-gathers /
+    # reduce-scatters appear in the dry-run HLO and are costed in §Roofline).
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_ffn": None,        # used instead of "experts" when E ∤ axis
+    "moe_cap": None,           # opt-in: shard expert-capacity slots (hillclimb)
+    "mamba_heads": "model",
+    "mamba_state": None,
+    "layers": None,            # scan-stacked leading axis
+    "conv": None,
+}
+
+
+@dataclasses.dataclass
+class Sharder:
+    """Turns logical axis names into shardings; inert when mesh is None."""
+
+    mesh: Optional[Mesh] = None
+    rules: Dict[str, MeshAxes] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+
+    def _resolve(self, axis: Optional[str],
+                 dim: Optional[int] = None) -> MeshAxes:
+        if axis is None:
+            return None
+        if axis not in self.rules:
+            raise KeyError(f"unknown logical axis {axis!r}")
+        target = self.rules[axis]
+        if target is None:
+            return None
+        if isinstance(target, str):
+            target = (target,)
+        present = tuple(t for t in target if t in self.mesh.axis_names)
+        if dim is not None:
+            # divisibility fallback: drop trailing mesh axes until the dim
+            # shards evenly (jit input shardings must divide exactly; the
+            # replication cost shows up in §Roofline and is a hillclimb
+            # target, not a silent failure).
+            while present:
+                total = 1
+                for t in present:
+                    total *= self.mesh.shape[t]
+                if dim % total == 0:
+                    break
+                present = present[:-1]
+        return present or None
+
+    def spec(self, axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        if self.mesh is None:
+            return P()
+        if shape is None:
+            return P(*(self._resolve(a) for a in axes))
+        return P(*(self._resolve(a, d) for a, d in zip(axes, shape)))
+
+    def named(self, axes: Sequence[Optional[str]],
+              shape: Optional[Sequence[int]] = None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+    def constrain(self, x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        if len(axes) != x.ndim:
+            raise ValueError(f"{len(axes)} axes for rank-{x.ndim} array")
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(axes, x.shape)))
+
+    def replicated(self) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P())
+
+
+def rules_for_config(cfg, mesh: Optional[Mesh]) -> Dict[str, MeshAxes]:
+    """Per-architecture rule table (EP-vs-TP choice, divisibility fixups)."""
+    rules = dict(DEFAULT_RULES)
+    if mesh is None:
+        return rules
+    model_size = mesh.shape.get("model", 1)
+    # Expert parallelism only when expert count divides the model axis;
+    # otherwise shard the expert FFN dim (expert-TP) and replicate experts.
+    if getattr(cfg, "num_experts", 0):
+        if cfg.num_experts % model_size == 0:
+            rules["experts"] = "model"
+            rules["expert_ffn"] = None
+        else:
+            rules["experts"] = None
+            rules["expert_ffn"] = "model"
+    for axis, target in getattr(cfg, "sharding_overrides", ()):
+        rules[axis] = tuple(target) if isinstance(target, list) else target
+    return rules
+
+
+def make_sharder(cfg, mesh: Optional[Mesh]) -> Sharder:
+    return Sharder(mesh=mesh, rules=rules_for_config(cfg, mesh))
+
+
+def tree_named_shardings(sharder: Sharder, spec_tree):
+    """Map a tree of logical-axis tuples to NamedShardings (or None)."""
+    return jax.tree.map(
+        lambda axes: sharder.named(axes),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )

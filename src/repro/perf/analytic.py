@@ -1,0 +1,224 @@
+"""Analytic FLOP / HBM-byte models per (arch × shape) cell.
+
+Why analytic: XLA's ``cost_analysis`` counts each ``while`` (scan) body ONCE
+— a 32-layer scanned model under-reports flops by ~32× and the chunked SSD /
+blockwise-attention inner scans compound it.  The models here follow the
+implementation einsum-for-einsum (block-rounded attention spans, MoE
+capacity compute, SSD chunk algebra) and are pinned to ``cost_analysis``
+ground truth in ``tests/test_perf_analytic.py`` on configurations where
+every scan is unrolled (small, scan_layers=False), where HLO counting IS
+exact.  At full scale the analytic number is the trustworthy one; artifacts
+record both.
+
+Counting convention: 1 multiply-add = 2 flops (XLA's).  Norms/softmax/rope
+are ignored (<2% at these widths; the validation tolerance covers them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs import ShapeDef
+from repro.models.api import LayerSpec, ModelConfig
+from repro.models.mamba import CHUNK
+from repro.models.moe import _capacity
+
+
+def _attended_per_token(seq: int, *, causal: bool, window, block: int,
+                        dense: bool) -> float:
+    """Average KV positions each query token touches (compute, not mask)."""
+    if not causal and window is None:
+        return float(seq)
+    if dense:
+        if window is None:
+            return (seq + 1) / 2.0
+        # mean over t of min(t+1, w)
+        w = min(window, seq)
+        return (w * (w + 1) / 2.0 + (seq - w) * w) / seq
+    # blockwise path computes whole matched blocks
+    nq = seq // block
+    if window is None:
+        return block * (nq + 1) / 2.0
+    wblocks = min(-(-window // block) + 1, nq)
+    total = 0
+    for i in range(nq):
+        total += min(i + 1, wblocks)
+    return total * block / nq
+
+
+def _attn_layer_flops(cfg: ModelConfig, tokens: float, kv_len: float,
+                      *, causal: bool, window, decode: bool,
+                      cross: bool = False, enc_tokens: float = 0.0) -> float:
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    f = 0.0
+    f += 2 * tokens * d * h * hd            # wq
+    kv_tokens = enc_tokens if cross else tokens
+    f += 2 * 2 * kv_tokens * d * kvh * hd   # wk, wv
+    f += 2 * tokens * d * h * hd            # wo
+    if decode or cross:
+        span = kv_len
+    else:
+        dense = kv_len <= cfg.attn_block_q
+        span = _attended_per_token(int(kv_len), causal=causal, window=window,
+                                   block=cfg.attn_block_k, dense=dense)
+    f += 2 * 2 * tokens * span * h * hd     # scores + pv
+    return f
+
+
+def _mlp_flops(cfg: ModelConfig, tokens: float) -> float:
+    return 3 * 2 * tokens * cfg.d_model * cfg.d_ff
+
+
+def _moe_flops(cfg: ModelConfig, tokens: float, rows: int, seq: int,
+               batch_shards: int = 1) -> float:
+    d, f_, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    router = 2 * tokens * d * e
+    g = max(1, min(cfg.moe_group_rows, rows))
+    if rows % g:
+        g = 1
+    while g > 1 and (rows // g) % batch_shards:   # mirrors moe_layer guard
+        g //= 2
+    cap = _capacity(seq * g, cfg)
+    expert = (rows // g) * e * cap * 3 * 2 * d * f_   # zero-padded bins
+    return router + expert
+
+
+def _mamba_layer_flops(cfg: ModelConfig, tokens: float, seq: int,
+                       decode: bool) -> float:
+    d, di, n, hm = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.mamba_heads
+    k = cfg.mamba_conv
+    f = 2 * tokens * d * di * 2             # wz, wx
+    f += 2 * 2 * tokens * d * n             # wB, wC
+    f += 2 * tokens * d * hm                # w_dt
+    f += 2 * tokens * di * d                # w_out
+    f += 2 * k * tokens * (di + 2 * n)      # causal convs
+    if decode:
+        f += 5 * tokens * n * di            # state update + readout
+    else:
+        L = min(CHUNK, seq)
+        f += 2 * tokens * L * n             # intra-chunk C·B scores
+        f += 2 * tokens * L * di            # intra-chunk apply (p-contraction)
+        f += 4 * tokens * L * hm            # decay algebra (L² · Hm terms)
+        f += 4 * tokens * n * di            # chunk state + inter-chunk
+    return f
+
+
+def _unembed_flops(cfg: ModelConfig, tokens: float) -> float:
+    return 2 * tokens * cfg.d_model * cfg.padded_vocab
+
+
+def flops_model(cfg: ModelConfig, shape: ShapeDef,
+                batch_shards: int = 16) -> Dict[str, float]:
+    """Global (all-device) flops for one step of this cell.
+
+    ``batch_shards``: data-parallel shard count (affects the MoE dispatch
+    grouping guard; 16 = the production single-pod data axis).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    decode = shape.kind == "decode"
+    tokens = float(b) if decode else float(b * s)
+    kv_len = float(s)
+
+    per_pattern = 0.0
+    for spec in cfg.pattern:
+        if spec.mixer.startswith("attn"):
+            causal = spec.mixer != "attn_bidir"
+            window = cfg.window if spec.mixer == "attn_local" else None
+            per_pattern += _attn_layer_flops(cfg, tokens, kv_len,
+                                             causal=causal, window=window,
+                                             decode=decode)
+        else:
+            per_pattern += _mamba_layer_flops(cfg, tokens, s, decode)
+        if spec.cross_attn:
+            enc_tokens = 0.0 if decode else float(b * s)
+            per_pattern += _attn_layer_flops(
+                cfg, tokens, float(s), causal=False, window=None,
+                decode=decode, cross=True, enc_tokens=enc_tokens)
+        if spec.mlp == "dense":
+            per_pattern += _mlp_flops(cfg, tokens)
+        elif spec.mlp == "moe":
+            seq_here = 1 if decode else s
+            per_pattern += _moe_flops(cfg, tokens, b, seq_here,
+                                      batch_shards=batch_shards)
+
+    fwd = per_pattern * cfg.num_blocks + _unembed_flops(cfg, tokens)
+
+    if cfg.is_encoder_decoder and not decode:
+        enc_tokens = float(b * s)
+        enc_layer = _attn_layer_flops(cfg, enc_tokens, float(s), causal=False,
+                                      window=None, decode=False) \
+            + _mlp_flops(cfg, enc_tokens)
+        fwd += enc_layer * cfg.num_encoder_layers
+
+    if shape.kind == "train":
+        mult = 4.0 if cfg.remat else 3.0    # fwd + (remat fwd) + 2×bwd
+        total = fwd * mult + 12.0 * cfg.param_count()   # optimizer
+    else:
+        total = fwd
+    return {"fwd_flops": fwd, "total_flops": total, "tokens": tokens}
+
+
+# ---------------------------------------------------------------------------
+# HBM byte model (per step, global; divide by chips for per-device)
+# ---------------------------------------------------------------------------
+
+def bytes_model(cfg: ModelConfig, shape: ShapeDef) -> Dict[str, float]:
+    b, s = shape.global_batch, shape.seq_len
+    decode = shape.kind == "decode"
+    tokens = float(b) if decode else float(b * s)
+    p = float(cfg.param_count())
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        # fp32 params read ×3 (fwd/remat/bwd) + write; grads r+w fp32;
+        # bf16 moments r+w.
+        param_traffic = p * (3 * 4 + 4 + 2 * 4 + 2 * 2 * 2)
+        act_traffic = tokens * cfg.num_layers * d * 40.0
+        # KV blocks are re-read from HBM once per *query block* (flash/
+        # blockwise streaming), not per query token.
+        kv_stream = 0.0
+        q_blocks = tokens / min(cfg.attn_block_q, s)
+        for spec in cfg.pattern:
+            if spec.mixer.startswith("attn"):
+                span = _attended_per_token(
+                    s, causal=spec.mixer != "attn_bidir",
+                    window=cfg.window if spec.mixer == "attn_local" else None,
+                    block=cfg.attn_block_k, dense=s <= cfg.attn_block_q)
+                kv_stream += q_blocks * span * cfg.num_kv_heads * cfg.head_dim \
+                    * 2 * 2 * 3 / len(cfg.pattern) * cfg.num_layers
+        total = param_traffic + act_traffic + kv_stream
+    elif shape.kind == "prefill":
+        param_traffic = p * 2.0
+        act_traffic = tokens * cfg.num_layers * d * 12.0
+        kv_write = sum(2 * tokens * cfg.num_kv_heads * cfg.head_dim * 2
+                       for sp in cfg.pattern if sp.mixer.startswith("attn")) \
+            / max(len(cfg.pattern), 1) * cfg.num_layers
+        total = param_traffic + act_traffic + kv_write
+    else:
+        param_traffic = p * 2.0             # weights read once (bf16)
+        cache = 0.0
+        for spec in cfg.pattern:
+            if spec.mixer.startswith("attn"):
+                cache += 2 * b * cfg.num_kv_heads * s * cfg.head_dim * 2
+            else:
+                cache += 2 * b * cfg.mamba_heads * cfg.ssm_state \
+                    * cfg.mamba_head_dim * 4
+        cache = cache / len(cfg.pattern) * cfg.num_layers
+        act = tokens * cfg.num_layers * d * 12.0
+        total = param_traffic + cache + act
+    return {"total_bytes": total}
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (the 6·N·D / 2·N·D reference for the "useful compute" ratio)
+# ---------------------------------------------------------------------------
+
+def model_flops_reference(cfg: ModelConfig, shape: ShapeDef) -> float:
+    n_active = float(cfg.active_param_count())
+    if shape.kind == "decode":
+        tokens = float(shape.global_batch)
+        return 2.0 * n_active * tokens
+    tokens = float(shape.global_batch * shape.seq_len)
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 6.0 * n_active * tokens

@@ -1,0 +1,186 @@
+"""Checkpointing: atomic, async, keep-N, mesh-resharding restore.
+
+Layout (one directory per step):
+    <dir>/step_00001234/
+        arrays.npz      — flattened pytree leaves, keyed by path
+        meta.json       — step, leaf paths/dtypes/shapes, user metadata
+    <dir>/step_00001234.tmp/   (write side; atomically renamed when complete)
+
+Fault-tolerance contract:
+  * a checkpoint is visible iff its final rename happened → readers never
+    see partial state;
+  * ``restore`` accepts target shardings (a NamedSharding tree or a
+    Sharder+axes) so state saved on one mesh restores onto another
+    (elastic up/down-scaling) — arrays are saved unsharded (gathered);
+  * the async writer keeps at most one save in flight and never blocks the
+    step loop longer than a device_get.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = []
+    leaves = []
+    for path, leaf in flat:
+        paths.append("/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                              for p in path))
+        leaves.append(leaf)
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory: str | Path, step: int, state,
+                    metadata: Optional[Dict[str, Any]] = None) -> Path:
+    """Write state atomically; returns the final checkpoint path."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    paths, leaves, _ = _flatten_with_paths(state)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+    arrays = {f"a{i}": l for i, l in enumerate(host_leaves)}
+    np.savez(tmp / "arrays.npz", **arrays)
+    meta = {
+        "step": step,
+        "paths": paths,
+        "dtypes": [str(l.dtype) for l in host_leaves],
+        "shapes": [list(l.shape) for l in host_leaves],
+        "metadata": metadata or {},
+    }
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)            # atomic visibility
+    return final
+
+
+def latest_checkpoint(directory: str | Path) -> Optional[Path]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    cands = sorted(p for p in directory.iterdir()
+                   if p.is_dir() and p.name.startswith("step_")
+                   and not p.name.endswith(".tmp"))
+    return cands[-1] if cands else None
+
+
+def checkpoint_step(path: Path) -> int:
+    return int(path.name.split("_")[1])
+
+
+def restore_checkpoint(path: str | Path, template,
+                       shardings=None):
+    """Restore into the structure of ``template`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching tree of
+    NamedShardings for resharding onto the current mesh."""
+    path = Path(path)
+    meta = json.loads((path / "meta.json").read_text())
+    with np.load(path / "arrays.npz") as z:
+        host = [z[f"a{i}"] for i in range(len(meta["paths"]))]
+
+    t_paths, t_leaves, treedef = _flatten_with_paths(template)
+    by_path = dict(zip(meta["paths"], host))
+    missing = [p for p in t_paths if p not in by_path]
+    if missing:
+        raise ValueError(f"checkpoint missing leaves: {missing[:5]}...")
+
+    shard_leaves: List[Any] = [None] * len(t_leaves)
+    if shardings is not None:
+        _, shard_leaves, _ = _flatten_with_paths(shardings)
+
+    out = []
+    for i, (p, t) in enumerate(zip(t_paths, t_leaves)):
+        arr = by_path[p].astype(t.dtype)
+        if tuple(arr.shape) != tuple(t.shape):
+            raise ValueError(f"{p}: shape {arr.shape} != template {t.shape}")
+        if shard_leaves[i] is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), meta
+
+
+def garbage_collect(directory: str | Path, keep: int) -> None:
+    directory = Path(directory)
+    if not directory.exists():
+        return
+    cands = sorted(p for p in directory.iterdir()
+                   if p.is_dir() and p.name.startswith("step_")
+                   and not p.name.endswith(".tmp"))
+    for p in cands[:-keep] if keep > 0 else []:
+        shutil.rmtree(p)
+
+
+class CheckpointManager:
+    """Async keep-N checkpoint writer (one save in flight)."""
+
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = Path(directory)
+        self.keep = keep
+        self.async_save = async_save
+        self._queue: "queue.Queue" = queue.Queue(maxsize=1)
+        self._errors: List[BaseException] = []
+        self._worker: Optional[threading.Thread] = None
+        if async_save:
+            self._worker = threading.Thread(target=self._run, daemon=True)
+            self._worker.start()
+
+    def _run(self):
+        while True:
+            item = self._queue.get()
+            if item is None:
+                return
+            step, state, meta = item
+            try:
+                save_checkpoint(self.directory, step, state, meta)
+                garbage_collect(self.directory, self.keep)
+            except BaseException as e:      # surfaced on next save/wait
+                self._errors.append(e)
+            finally:
+                self._queue.task_done()
+
+    def save(self, step: int, state, metadata=None):
+        if self._errors:
+            raise RuntimeError("async checkpoint failed") from self._errors[0]
+        # materialize on host NOW so the step loop can mutate buffers freely
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+        if self.async_save:
+            self._queue.put((step, host_state, metadata))   # blocks if busy
+        else:
+            save_checkpoint(self.directory, step, host_state, metadata)
+            garbage_collect(self.directory, self.keep)
+
+    def wait(self):
+        if self.async_save:
+            self._queue.join()
+        if self._errors:
+            raise RuntimeError("async checkpoint failed") from self._errors[0]
+
+    def latest(self) -> Optional[Path]:
+        self.wait()
+        return latest_checkpoint(self.directory)
+
+    def close(self):
+        if self.async_save and self._worker is not None:
+            self.wait()
+            self._queue.put(None)
+            self._worker.join()
+            self._worker = None

@@ -1,0 +1,93 @@
+"""Pure-JAX AdamW + schedules (no external optimizer dependency).
+
+Memory layout for the 100B+ configs: master params stay fp32; the first and
+second moments are stored in bf16 (a deliberate large-scale trade-off — the
+moment quantization error is far below gradient noise at these batch sizes;
+documented in DESIGN.md).  Set ``moment_dtype=jnp.float32`` to disable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array        # () int32
+    m: Any                 # pytree like params
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1.0e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: Any = jnp.bfloat16
+
+    def init(self, params) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(zeros, params),
+                         jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamState, params
+               ) -> Tuple[Any, AdamState, dict]:
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1.0e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(
+            lambda mm, g: (b1 * mm.astype(jnp.float32)
+                           + (1 - b1) * g.astype(jnp.float32)
+                           ).astype(self.moment_dtype), state.m, grads)
+        v = jax.tree.map(
+            lambda vv, g: (b2 * vv.astype(jnp.float32)
+                           + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                           ).astype(self.moment_dtype), state.v, grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.learning_rate(step)
+
+        def upd(p, mm, vv):
+            mhat = mm.astype(jnp.float32) / c1
+            vhat = vv.astype(jnp.float32) / c2
+            du = mhat / (jnp.sqrt(vhat) + self.eps)
+            du = du + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * du).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, m, v)
+        return updates, AdamState(step, m, v), {"grad_norm": gnorm, "lr": lr}
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    floor: float = 0.1) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)

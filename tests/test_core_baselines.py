@@ -1,0 +1,134 @@
+"""Baselines (BF, grid, rank/ITM-analogue) agree with the oracle, and the
+reporting paths (enumeration, match matrices) return exactly the right pairs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Extents,
+    bf_count,
+    brute_force_count_numpy,
+    brute_force_pairs_numpy,
+    enumerate_matches,
+    enumerate_matches_ddim,
+    grid_count,
+    make_uniform_workload,
+    match_matrix,
+    match_matrix_ddim,
+    per_sub_match_counts,
+    per_upd_match_counts,
+    rank_count,
+    row_index_lists,
+    sbm_count,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def workload():
+    key = jax.random.PRNGKey(3)
+    return make_uniform_workload(key, 200, 260, alpha=5.0, length=1000.0)
+
+
+def test_bf_count(workload):
+    subs, upds = workload
+    assert int(bf_count(subs, upds, block=64)) == brute_force_count_numpy(subs, upds)
+
+
+def test_rank_count(workload):
+    subs, upds = workload
+    assert int(rank_count(subs, upds)) == brute_force_count_numpy(subs, upds)
+
+
+def test_rank_duality(workload):
+    subs, upds = workload
+    assert int(per_sub_match_counts(subs, upds).sum()) == \
+        int(per_upd_match_counts(subs, upds).sum())
+
+
+def test_per_sub_counts_exact(workload):
+    subs, upds = workload
+    mask = np.asarray(match_matrix(subs, upds))
+    np.testing.assert_array_equal(np.asarray(per_sub_match_counts(subs, upds)),
+                                  mask.sum(axis=1))
+
+
+@pytest.mark.parametrize("num_cells", [1, 8, 64])
+def test_grid_count(workload, num_cells):
+    subs, upds = workload
+    count, overflow = grid_count(subs, upds, num_cells=num_cells,
+                                 length=1000.0, cap=512)
+    assert int(overflow) == 0
+    assert int(count) == brute_force_count_numpy(subs, upds)
+
+
+def test_grid_overflow_reported():
+    # 1 cell with cap 4 but 8 extents → overflow must be flagged.
+    lo = jnp.zeros((8,), jnp.float32)
+    hi = jnp.ones((8,), jnp.float32)
+    count, overflow = grid_count(Extents(lo, hi), Extents(lo, hi),
+                                 num_cells=1, length=1.0, cap=4)
+    assert int(overflow) > 0
+
+
+def test_enumerate_matches(workload):
+    subs, upds = workload
+    want = brute_force_pairs_numpy(subs, upds)
+    pairs, count = enumerate_matches(subs, upds, max_pairs=len(want) + 16,
+                                     block=64)
+    assert int(count) == len(want)
+    got = {(int(i), int(j)) for i, j in np.asarray(pairs) if i >= 0}
+    assert got == want
+
+
+def test_enumerate_overflow_still_counts():
+    lo = jnp.zeros((4,), jnp.float32)
+    hi = jnp.ones((4,), jnp.float32)
+    pairs, count = enumerate_matches(Extents(lo, hi), Extents(lo, hi),
+                                     max_pairs=5, block=4)
+    assert int(count) == 16  # true K reported even though buffer is short
+    got = {(int(i), int(j)) for i, j in np.asarray(pairs) if i >= 0}
+    assert len(got) == 5
+
+
+def test_ddim_matching():
+    key = jax.random.PRNGKey(9)
+    k1, k2 = jax.random.split(key)
+    d, n, m = 3, 40, 50
+    lo_s = jax.random.uniform(k1, (d, n), maxval=80.0)
+    hi_s = lo_s + jax.random.uniform(jax.random.fold_in(k1, 1), (d, n), maxval=30.0)
+    lo_u = jax.random.uniform(k2, (d, m), maxval=80.0)
+    hi_u = lo_u + jax.random.uniform(jax.random.fold_in(k2, 1), (d, m), maxval=30.0)
+    subs, upds = Extents(lo_s, hi_s), Extents(lo_u, hi_u)
+    want = brute_force_pairs_numpy(subs, upds)
+    mask = np.asarray(match_matrix_ddim(subs, upds))
+    assert {(int(i), int(j)) for i, j in zip(*np.nonzero(mask))} == want
+    pairs, count = enumerate_matches_ddim(subs, upds, max_pairs=n * m)
+    got = {(int(i), int(j)) for i, j in np.asarray(pairs) if i >= 0}
+    assert got == want and int(count) == len(want)
+
+
+def test_row_index_lists():
+    mask = jnp.asarray([[True, False, True, False],
+                        [False, False, False, False],
+                        [True, True, True, True]])
+    idx, counts = row_index_lists(mask, max_per_row=3)
+    np.testing.assert_array_equal(np.asarray(counts), [2, 0, 4])
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  [[0, 2, -1], [-1, -1, -1], [0, 1, 2]])
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.01, 50.0))
+@settings(max_examples=20, deadline=None)
+def test_property_all_algorithms_agree(seed, alpha):
+    key = jax.random.PRNGKey(seed)
+    subs, upds = make_uniform_workload(key, 60, 70, alpha=alpha, length=500.0)
+    want = brute_force_count_numpy(subs, upds)
+    assert int(sbm_count(subs, upds)) == want
+    assert int(rank_count(subs, upds)) == want
+    assert int(bf_count(subs, upds, block=32)) == want
+    count, overflow = grid_count(subs, upds, num_cells=16, length=500.0, cap=256)
+    assert int(overflow) == 0 and int(count) == want

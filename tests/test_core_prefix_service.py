@@ -1,0 +1,156 @@
+"""Prefix-scan machinery + DDM service behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DDMService
+from repro.core import prefix as prefix_lib
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("n,p", [(64, 1), (64, 8), (128, 32), (96, 4)])
+def test_two_level_scan_matches_cumsum(n, p):
+    x = jax.random.randint(jax.random.PRNGKey(0), (n,), -5, 6)
+    np.testing.assert_array_equal(
+        np.asarray(prefix_lib.cumsum_two_level(x, p)),
+        np.cumsum(np.asarray(x)))
+
+
+def test_two_level_scan_batched():
+    x = jax.random.randint(jax.random.PRNGKey(1), (3, 64), 0, 10)
+    np.testing.assert_array_equal(
+        np.asarray(prefix_lib.cumsum_two_level(x, 8)),
+        np.cumsum(np.asarray(x), axis=-1))
+
+
+def test_blelloch_scan():
+    x = jnp.arange(100, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(prefix_lib.cumsum_blelloch(x)),
+                                  np.cumsum(np.arange(100)))
+
+
+@given(st.lists(st.tuples(st.booleans(), st.booleans()), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_delta_monoid_associativity(flags):
+    """The Algorithm-6 delta-set monoid must be associative for the tree scan
+    to be legal — fuzz (A, D) elements and compare left/right grouping."""
+    n = 8
+    rng = np.random.RandomState(42)
+    elems = []
+    for _ in range(max(3, len(flags))):
+        a = rng.rand(n) < 0.4
+        d = (rng.rand(n) < 0.4) & ~a  # invariant A ∩ D = ∅
+        elems.append((jnp.asarray(a), jnp.asarray(d)))
+
+    def comb(e1, e2):
+        return prefix_lib.delta_combine_bool(e1, e2)
+
+    e1, e2, e3 = elems[0], elems[1], elems[2]
+    left = comb(comb(e1, e2), e3)
+    right = comb(e1, comb(e2, e3))
+    np.testing.assert_array_equal(np.asarray(left[0]), np.asarray(right[0]))
+    np.testing.assert_array_equal(np.asarray(left[1]), np.asarray(right[1]))
+
+
+def test_pack_unpack_bits_roundtrip():
+    rng = np.random.RandomState(0)
+    for n in [1, 31, 32, 33, 100, 256]:
+        mask = jnp.asarray(rng.rand(n) < 0.5)
+        words = prefix_lib.pack_bits(mask)
+        assert words.dtype == jnp.uint32
+        back = prefix_lib.unpack_bits(words, n)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(mask))
+
+
+# ---------------------------------------------------------------------------
+# DDM service
+# ---------------------------------------------------------------------------
+
+def test_service_basic_match_and_route():
+    svc = DDMService(dims=2, capacity=64)
+    s1 = svc.register_subscription([0, 0], [10, 10])
+    s2 = svc.register_subscription([20, 20], [30, 30])
+    u1 = svc.register_update([5, 5], [25, 25])
+    assert set(svc.matches_for_update(u1)) == {s1, s2}
+    assert svc.route(u1, "event")[s1] == "event"
+    assert svc.match_count() == 2
+
+
+def test_service_paper_figure1():
+    # Fig. 1: S1,S2,S3 vs U1,U2 → 4 matches, S-S overlaps ignored.
+    svc = DDMService(dims=2, capacity=16)
+    s1 = svc.register_subscription([0, 5], [4, 9])
+    s2 = svc.register_subscription([3, 2], [8, 6])
+    s3 = svc.register_subscription([6, 4], [14, 11])
+    u1 = svc.register_update([1, 3], [7, 8])
+    u2 = svc.register_update([9, 6], [13, 10])
+    assert svc.all_pairs() == {(s1, u1), (s2, u1), (s3, u1), (s3, u2)}
+
+
+def test_service_dynamic_moves():
+    svc = DDMService(dims=1, capacity=32)
+    s = svc.register_subscription([0], [10])
+    u = svc.register_update([20], [30])
+    assert svc.matches_for_update(u) == []
+    svc.move_update(u, [5], [15])          # slides into range
+    assert svc.matches_for_update(u) == [s]
+    svc.move_subscription(s, [100], [110])  # slides out
+    assert svc.matches_for_update(u) == []
+    assert svc.match_count() == 0
+
+
+def test_service_unregister():
+    svc = DDMService(dims=1, capacity=8)
+    s = svc.register_subscription([0], [10])
+    u = svc.register_update([5], [6])
+    assert svc.match_count() == 1
+    svc.unregister_subscription(s)
+    assert svc.matches_for_update(u) == []
+    with pytest.raises(KeyError):
+        svc.unregister_subscription(s)
+    # slot reuse
+    s2 = svc.register_subscription([5], [7])
+    assert svc.matches_for_update(u) == [s2]
+
+
+def test_service_consistency_with_random_mutations():
+    rng = np.random.RandomState(11)
+    svc = DDMService(dims=1, capacity=256)
+    live_s, live_u = {}, {}
+    for step in range(120):
+        op = rng.randint(0, 5)
+        if op == 0 or not live_s:
+            lo = rng.rand() * 100
+            rid = svc.register_subscription([lo], [lo + rng.rand() * 20])
+            live_s[rid] = None
+        elif op == 1 or not live_u:
+            lo = rng.rand() * 100
+            rid = svc.register_update([lo], [lo + rng.rand() * 20])
+            live_u[rid] = None
+        elif op == 2:
+            rid = list(live_s)[rng.randint(len(live_s))]
+            lo = rng.rand() * 100
+            svc.move_subscription(rid, [lo], [lo + rng.rand() * 20])
+        elif op == 3 and len(live_s) > 1:
+            rid = list(live_s)[rng.randint(len(live_s))]
+            svc.unregister_subscription(rid)
+            del live_s[rid]
+        elif op == 4 and len(live_u) > 1:
+            rid = list(live_u)[rng.randint(len(live_u))]
+            svc.unregister_update(rid)
+            del live_u[rid]
+    # final state must equal a from-scratch brute force over live regions
+    pairs = svc.all_pairs()
+    lo_s = svc._subs.lo[0]
+    hi_s = svc._subs.hi[0]
+    lo_u = svc._upds.lo[0]
+    hi_u = svc._upds.hi[0]
+    want = set()
+    for i in live_s:
+        for j in live_u:
+            if lo_s[i] <= hi_u[j] and lo_u[j] <= hi_s[i]:
+                want.add((i, j))
+    assert pairs == want

@@ -1,0 +1,62 @@
+"""Distributed matching paths under a real (host-emulated) multi-device mesh.
+
+These run in a subprocess because XLA pins the platform device count at first
+init — the main test process must keep seeing 1 device.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import (Extents, make_uniform_workload, sbm_count_sharded,
+                            rank_count_sharded, bf_count_sharded,
+                            brute_force_count_numpy)
+    from repro.core.prefix import shard_inclusive_cumsum
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    import numpy as np
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = jax.make_mesh((8,), ("p",))
+
+    # distributed two-level scan == cumsum
+    x = jax.random.randint(jax.random.PRNGKey(0), (64,), -5, 6)
+    fn = shard_map(lambda s: shard_inclusive_cumsum(s, "p"), mesh=mesh,
+                   in_specs=P("p"), out_specs=P("p"))
+    np.testing.assert_array_equal(np.asarray(fn(x)), np.cumsum(np.asarray(x)))
+
+    key = jax.random.PRNGKey(42)
+    subs, upds = make_uniform_workload(key, 300, 340, alpha=10.0, length=1000.0)
+    want = brute_force_count_numpy(subs, upds)
+    got_sbm = int(sbm_count_sharded(subs, upds, mesh, "p"))
+    got_rank = int(rank_count_sharded(subs, upds, mesh, "p"))
+    # bf shard path needs n divisible by shards: 300 % 8 != 0 → pad inert subs
+    pad = (-300) % 8
+    subs_p = Extents(jnp.concatenate([subs.lo, jnp.full((pad,), jnp.inf)]),
+                     jnp.concatenate([subs.hi, jnp.full((pad,), -jnp.inf)]))
+    got_bf = int(bf_count_sharded(subs_p, upds, mesh, "p", block=64))
+    assert got_sbm == want, (got_sbm, want)
+    assert got_rank == want, (got_rank, want)
+    assert got_bf == want, (got_bf, want)
+    print("SHARDED_OK", want)
+""")
+
+
+@pytest.mark.slow
+def test_sharded_matching_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "SHARDED_OK" in res.stdout

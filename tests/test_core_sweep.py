@@ -1,0 +1,161 @@
+"""Parallel SBM correctness: exact agreement with brute force on adversarial
+inputs (ties, duplicates, zero-length, containment), across scan backends and
+segment counts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Extents,
+    active_sets_at_segment_starts,
+    brute_force_count_numpy,
+    make_uniform_workload,
+    sbm_count,
+    sequential_sbm_count_numpy,
+    sequential_sbm_pairs_numpy,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(lo_s, hi_s, lo_u, hi_u):
+    subs = Extents(jnp.asarray(lo_s, jnp.float32), jnp.asarray(hi_s, jnp.float32))
+    upds = Extents(jnp.asarray(lo_u, jnp.float32), jnp.asarray(hi_u, jnp.float32))
+    return subs, upds
+
+
+def test_paper_figure1_example():
+    # Fig. 1 of the paper (projected to 1-D x-axis, hand-made coordinates):
+    # S1=[0,4], S2=[3,8], S3=[6,14], U1=[1,7], U2=[9,13]
+    subs, upds = _mk([0, 3, 6], [4, 8, 14], [1, 9], [7, 13])
+    # overlaps: (S1,U1), (S2,U1), (S3,U1), (S3,U2) → 4 (paper reports 4 in 2-D)
+    assert int(sbm_count(subs, upds)) == 4
+    assert sequential_sbm_count_numpy(subs, upds) == 4
+
+
+@pytest.mark.parametrize("scan_impl", ["two_level", "blelloch", "xla"])
+@pytest.mark.parametrize("num_segments", [1, 2, 8, 32])
+def test_matches_brute_force_random(scan_impl, num_segments):
+    key = jax.random.PRNGKey(0)
+    subs, upds = make_uniform_workload(key, 100, 140, alpha=2.0, length=1000.0)
+    want = brute_force_count_numpy(subs, upds)
+    got = int(sbm_count(subs, upds, num_segments=num_segments, scan_impl=scan_impl))
+    assert got == want
+
+
+@pytest.mark.parametrize("alpha", [0.01, 1.0, 100.0])
+def test_alpha_sweep(alpha):
+    key = jax.random.PRNGKey(1)
+    subs, upds = make_uniform_workload(key, 300, 300, alpha=alpha)
+    assert int(sbm_count(subs, upds)) == brute_force_count_numpy(subs, upds)
+
+
+def test_touching_endpoints_closed_semantics():
+    # S ends exactly where U begins → closed intervals intersect.
+    subs, upds = _mk([0.0], [5.0], [5.0], [9.0])
+    assert int(sbm_count(subs, upds)) == 1
+    # and the mirror
+    subs, upds = _mk([5.0], [9.0], [0.0], [5.0])
+    assert int(sbm_count(subs, upds)) == 1
+
+
+def test_zero_length_intervals():
+    subs, upds = _mk([2.0, 4.0], [2.0, 4.0], [2.0], [2.0])
+    # S1=[2,2] matches U=[2,2]; S2=[4,4] does not.
+    assert int(sbm_count(subs, upds)) == 1
+
+
+def test_identical_intervals_all_pairs():
+    n = 17
+    subs, upds = _mk([1.0] * n, [2.0] * n, [1.5] * 13, [3.0] * 13)
+    assert int(sbm_count(subs, upds)) == n * 13
+
+
+def test_containment_and_duplicates():
+    subs, upds = _mk([0, 0, 1, 1], [10, 10, 2, 2], [1, 0, 5], [2, 100, 5])
+    assert int(sbm_count(subs, upds)) == brute_force_count_numpy(
+        *_mk([0, 0, 1, 1], [10, 10, 2, 2], [1, 0, 5], [2, 100, 5]))
+
+
+def test_empty_sets():
+    subs, upds = _mk([], [], [1.0], [2.0])
+    assert int(sbm_count(subs, upds)) == 0
+    subs, upds = _mk([1.0], [2.0], [], [])
+    assert int(sbm_count(subs, upds)) == 0
+
+
+# allow_subnormal=False: XLA CPU flushes float32 denormals to zero, numpy
+# does not — comparisons at ~1e-42 would differ between oracle and sweep.
+finite_floats = st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+                          width=32, allow_subnormal=False)
+
+
+@st.composite
+def interval_sets(draw):
+    n = draw(st.integers(1, 40))
+    m = draw(st.integers(1, 40))
+
+    def mk(count):
+        lows, highs = [], []
+        for _ in range(count):
+            a = draw(finite_floats)
+            b = draw(finite_floats)
+            lows.append(min(a, b))
+            highs.append(max(a, b))
+        return lows, highs
+
+    ls, hs = mk(n)
+    lu, hu = mk(m)
+    return ls, hs, lu, hu
+
+
+@given(interval_sets())
+@settings(max_examples=60, deadline=None)
+def test_property_count_equals_brute_force(data):
+    ls, hs, lu, hu = data
+    subs, upds = _mk(ls, hs, lu, hu)
+    want = brute_force_count_numpy(subs, upds)
+    assert int(sbm_count(subs, upds, num_segments=4)) == want
+    assert sequential_sbm_count_numpy(subs, upds) == want
+
+
+@given(interval_sets())
+@settings(max_examples=30, deadline=None)
+def test_property_sequential_pairs_match(data):
+    ls, hs, lu, hu = data
+    subs, upds = _mk(ls, hs, lu, hu)
+    from repro.core import brute_force_pairs_numpy
+    assert sequential_sbm_pairs_numpy(subs, upds) == brute_force_pairs_numpy(subs, upds)
+
+
+def test_algorithm6_active_sets_match_sequential():
+    """SubSet[p]/UpdSet[p] (Alg. 6 lines 18-21) equal the sequential sweep's
+    state right after segment T_{p-1} — the paper's correctness condition."""
+    key = jax.random.PRNGKey(7)
+    subs, upds = make_uniform_workload(key, 48, 40, alpha=8.0, length=100.0)
+    num_segments = 8
+    ep, sub_active, upd_active = active_sets_at_segment_starts(
+        subs, upds, num_segments)
+    # Sequential replay over the same (sorted, padded) endpoint stream:
+    values = np.asarray(ep.values)
+    is_up = np.asarray(ep.is_upper)
+    is_sub = np.asarray(ep.is_sub)
+    owner = np.asarray(ep.owner)
+    total = values.shape[0]
+    seg = total // num_segments
+    cur_s, cur_u = set(), set()
+    for p in range(num_segments):
+        got_s = set(np.nonzero(np.asarray(sub_active[p]))[0].tolist())
+        got_u = set(np.nonzero(np.asarray(upd_active[p]))[0].tolist())
+        assert got_s == cur_s, f"segment {p}: SubSet mismatch"
+        assert got_u == cur_u, f"segment {p}: UpdSet mismatch"
+        for k in range(p * seg, (p + 1) * seg):
+            if owner[k] < 0:
+                continue
+            tgt = cur_s if is_sub[k] else cur_u
+            if is_up[k]:
+                tgt.discard(int(owner[k]))
+            else:
+                tgt.add(int(owner[k]))

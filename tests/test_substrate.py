@@ -1,0 +1,252 @@
+"""Training/serving substrate: checkpoint atomicity + resharding restore,
+train-loop resume determinism + crash recovery, data pipeline determinism,
+optimizer behaviour, serve engine scheduling."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeDef, get_config, reduce_config
+from repro.data.synthetic import SyntheticConfig, SyntheticLM
+from repro.models import Model
+from repro.serve.engine import Request, ServeEngine, generate_greedy
+from repro.train import checkpoint as ckpt
+from repro.train.loop import TrainLoop, TrainLoopConfig, make_grad_accum_loss
+from repro.train.optimizer import AdamW, apply_updates, constant_schedule
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    d = SyntheticLM(SyntheticConfig(vocab_size=97, seq_len=64, global_batch=4))
+    b1 = d.batch(7)
+    b2 = d.batch(7)
+    for k in b1:
+        np.testing.assert_array_equal(np.asarray(b1[k]), np.asarray(b2[k]))
+    b3 = d.batch(8)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_data_host_slices_partition_global_batch():
+    d = SyntheticLM(SyntheticConfig(vocab_size=97, seq_len=32, global_batch=8))
+    full = d.batch(3)
+    parts = [d.host_batch(3, h, 4) for h in range(4)]
+    got = np.concatenate([np.asarray(p["tokens"]) for p in parts])
+    np.testing.assert_array_equal(got, np.asarray(full["tokens"]))
+
+
+def test_data_packing_invariants():
+    d = SyntheticLM(SyntheticConfig(vocab_size=97, seq_len=256, global_batch=2,
+                                    mean_doc_len=32))
+    b = d.batch(0)
+    seg = np.asarray(b["segments"])
+    pos = np.asarray(b["positions"])
+    lab = np.asarray(b["labels"])
+    tok = np.asarray(b["tokens"])
+    assert (np.diff(seg, axis=1) >= 0).all()          # doc ids non-decreasing
+    # positions reset at each doc boundary
+    boundary = np.diff(seg, axis=1) > 0
+    assert (pos[:, 1:][boundary] == 0).all()
+    # labels are next tokens (where not masked)
+    m = lab[:, :-1] >= 0
+    np.testing.assert_array_equal(lab[:, :-1][m], tok[:, 1:][m])
+    # no label crosses a document boundary
+    assert (lab[:, :-1][boundary] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _toy_state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "nested": {"b": jnp.arange(7, dtype=jnp.int32),
+                       "c": jnp.float32(3.5)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = _toy_state()
+    ckpt.save_checkpoint(tmp_path, 12, state, {"note": "x"})
+    latest = ckpt.latest_checkpoint(tmp_path)
+    assert ckpt.checkpoint_step(latest) == 12
+    restored, meta = ckpt.restore_checkpoint(latest, state)
+    assert meta["step"] == 12 and meta["metadata"]["note"] == "x"
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), state, restored)
+
+
+def test_checkpoint_atomicity_no_partial_visible(tmp_path):
+    # a leftover .tmp dir (simulated crash mid-write) must be invisible
+    (tmp_path / "step_00000005.tmp").mkdir()
+    assert ckpt.latest_checkpoint(tmp_path) is None
+    ckpt.save_checkpoint(tmp_path, 5, _toy_state())
+    assert ckpt.checkpoint_step(ckpt.latest_checkpoint(tmp_path)) == 5
+
+
+def test_checkpoint_keep_n(tmp_path):
+    for s in range(6):
+        ckpt.save_checkpoint(tmp_path, s, _toy_state())
+    ckpt.garbage_collect(tmp_path, keep=2)
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert names == ["step_00000004", "step_00000005"]
+
+
+def test_checkpoint_manager_async(tmp_path):
+    mgr = ckpt.CheckpointManager(tmp_path, keep=2, async_save=True)
+    for s in range(4):
+        mgr.save(s, _toy_state(s))
+    mgr.wait()
+    assert ckpt.checkpoint_step(mgr.latest()) == 3
+    mgr.close()
+
+
+def test_checkpoint_restore_detects_shape_mismatch(tmp_path):
+    ckpt.save_checkpoint(tmp_path, 1, {"a": jnp.zeros((3, 3))})
+    with pytest.raises(ValueError):
+        ckpt.restore_checkpoint(ckpt.latest_checkpoint(tmp_path),
+                                {"a": jnp.zeros((4, 4))})
+
+
+# ---------------------------------------------------------------------------
+# train loop
+# ---------------------------------------------------------------------------
+
+def _tiny_setup(tmp_path, total_steps=8, ckpt_every=4, microbatches=1,
+                fault_hook=None):
+    cfg = reduce_config(get_config("smollm-360m"))
+    model = Model(cfg)
+    data = SyntheticLM(SyntheticConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                       global_batch=4))
+    opt = AdamW(constant_schedule(1e-2), moment_dtype=jnp.float32)
+    loop_cfg = TrainLoopConfig(
+        total_steps=total_steps, checkpoint_every=ckpt_every,
+        checkpoint_dir=str(tmp_path / "ckpt"), log_every=1,
+        microbatches=microbatches, async_checkpoint=False)
+    return TrainLoop(model, opt, data, loop_cfg, fault_hook=fault_hook)
+
+
+def test_loss_decreases_on_learnable_task(tmp_path):
+    loop = _tiny_setup(tmp_path, total_steps=30, ckpt_every=30)
+    loop.run(jax.random.PRNGKey(0), resume=False)
+    losses = [h["loss"] for h in loop.history if "loss" in h]
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+
+
+def test_resume_is_bitwise_deterministic(tmp_path):
+    # uninterrupted run of 8 steps
+    loop_a = _tiny_setup(tmp_path / "a", total_steps=8, ckpt_every=4)
+    final_a = loop_a.run(jax.random.PRNGKey(0), resume=False)
+    # interrupted: run 4 steps, then a fresh loop resumes 4 more
+    loop_b1 = _tiny_setup(tmp_path / "b", total_steps=4, ckpt_every=4)
+    loop_b1.run(jax.random.PRNGKey(0), resume=False)
+    loop_b2 = _tiny_setup(tmp_path / "b", total_steps=8, ckpt_every=4)
+    final_b = loop_b2.run(jax.random.PRNGKey(0), resume=True)
+    assert final_b.step == final_a.step == 8
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), final_a.params, final_b.params)
+
+
+def test_crash_recovery_mid_run(tmp_path):
+    crashes = {"armed": True}
+
+    def fault(step):
+        if step == 6 and crashes["armed"]:
+            crashes["armed"] = False
+            raise RuntimeError("injected node failure")
+
+    loop = _tiny_setup(tmp_path, total_steps=8, ckpt_every=4,
+                       fault_hook=fault)
+    final = loop.run(jax.random.PRNGKey(0), resume=False)
+    assert final.step == 8
+    events = [h for h in loop.history if h.get("event") == "recovered"]
+    assert len(events) == 1 and events[0]["step"] == 4  # resumed from ckpt 4
+
+    # and the result equals the uninterrupted run (determinism after crash)
+    loop_ref = _tiny_setup(tmp_path / "ref", total_steps=8, ckpt_every=4)
+    final_ref = loop_ref.run(jax.random.PRNGKey(0), resume=False)
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), final.params, final_ref.params)
+
+
+def test_grad_accumulation_matches_full_batch(tmp_path):
+    cfg = reduce_config(get_config("smollm-360m"))
+    model = Model(cfg)
+    data = SyntheticLM(SyntheticConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                       global_batch=8))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = data.batch(0)
+    (l1, _), g1 = make_grad_accum_loss(model, 1)(params, batch)
+    (l4, _), g4 = make_grad_accum_loss(model, 4)(params, batch)
+    # same loss & grads up to reduction-order fp error
+    np.testing.assert_allclose(float(l1), float(l4), rtol=1e-5)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-5), g1, g4)
+
+
+def test_straggler_monitor_flags_outliers():
+    from repro.train.loop import StragglerMonitor
+    mon = StragglerMonitor(sigma=3.0, warmup=3)
+    for i in range(20):
+        assert not mon.observe(i, 0.1 + 0.001 * (i % 3))
+    assert mon.observe(20, 1.5)       # 15× step time → flagged
+    assert mon.flagged == [20]
+
+
+# ---------------------------------------------------------------------------
+# serve engine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = reduce_config(get_config("smollm-360m"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_engine_matches_manual_greedy(served_model):
+    model, params = served_model
+    prompt = list(range(1, 9))
+    got = generate_greedy(model, params, prompt, max_new_tokens=6, max_len=32)
+    # manual greedy via full forward re-run each step
+    toks = list(prompt)
+    for _ in range(6):
+        logits, _ = jax.jit(model.forward)(
+            params, {"tokens": jnp.asarray([toks], jnp.int32)})
+        toks.append(int(jnp.argmax(logits[0, -1, :model.cfg.vocab_size])))
+    assert got == toks[len(prompt):]
+
+
+def test_engine_batches_and_buckets(served_model):
+    model, params = served_model
+    eng = ServeEngine(model, params, num_slots=3, max_len=64)
+    prompts = {0: [1, 2, 3, 4], 1: [5, 6, 7, 8], 2: [9, 10],
+               3: [11, 12, 13, 14], 4: [15, 16]}
+    for rid, p in prompts.items():
+        eng.submit(Request(rid, p, max_new_tokens=4))
+    results = eng.run()
+    assert set(results) == set(prompts)
+    # each result must equal its single-request generation
+    for rid, p in prompts.items():
+        solo = generate_greedy(model, params, p, max_new_tokens=4, max_len=64)
+        assert results[rid].tokens == solo, rid
+
+
+def test_engine_eos_stops(served_model):
+    model, params = served_model
+    prompt = [1, 2, 3, 4]
+    free = generate_greedy(model, params, prompt, max_new_tokens=8, max_len=32)
+    eng = ServeEngine(model, params, num_slots=1, max_len=32)
+    eos = free[2]
+    eng.submit(Request(0, prompt, max_new_tokens=8, eos_id=eos))
+    out = eng.run()[0].tokens
+    stop = free.index(eos)            # first occurrence wins
+    assert out == free[:stop + 1]     # stops at (and includes) EOS
