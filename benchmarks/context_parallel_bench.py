@@ -29,7 +29,7 @@ def _run(rows: List[str]) -> None:
     import dataclasses
     import jax
     import jax.numpy as jnp
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs import SHAPES, get_config

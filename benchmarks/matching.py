@@ -1,11 +1,17 @@
 """Paper Figs. 7a / 8a / 8b: wall-clock of BF vs ITM-analogue (rank) vs SBM
-as functions of algorithm, N, and the overlapping degree α.
+as functions of algorithm, N, and the overlapping degree α — plus the
+*enumeration* mode (count vs pair reporting, sweep emission vs blocked
+all-pairs).
 
 Methodology follows the paper §5: N extents (half subscriptions), identical
 length l = αL/N uniformly placed on L = 1e6; measurements average multiple
-runs after a warmup (jit) run; matching only *counts* (as the paper does).
-Scaled to CPU-feasible N (the paper's asymptotics are the claim under test:
-SBM polylog growth in N, α-independence, ≫BF).
+runs after a warmup (jit) run.  Scaled to CPU-feasible N (the paper's
+asymptotics are the claim under test: SBM polylog growth in N,
+α-independence, ≫BF; for enumeration, output-sensitivity: sweep emission
+cost ~ K, blocked all-pairs cost ~ n·m).
+
+Run standalone with ``python -m benchmarks.matching [--only enumeration]``
+or through ``python -m benchmarks.run --only matching``.
 """
 from __future__ import annotations
 
@@ -15,8 +21,10 @@ from typing import Callable, Dict, List
 import jax
 import jax.numpy as jnp
 
-from repro.core import (bf_count, make_uniform_workload, rank_count,
-                        sbm_count)
+from repro.core import (bf_count, enumerate_matches, make_clustered_workload,
+                        make_uniform_workload, rank_count, sbm_count,
+                        sbm_enumerate)
+from repro.core.enumerate import round_up_pow2
 from repro.core.sweep import sequential_sbm_count_numpy
 
 REPS = 5
@@ -90,8 +98,67 @@ def scan_impl_sweep(rows: List[str]) -> None:
         rows.append(f"matching_sbm_scan_{impl}_n1e6,{dt*1e6:.1f},")
 
 
+def enumeration(rows: List[str]) -> None:
+    """Count vs *enumerate* throughput: sweep emission vs blocked all-pairs.
+
+    The sweep path is output-sensitive (O((n+m)log(n+m) + K)); blocked
+    all-pairs enumeration is O(n·m) regardless of K.  The blocked reference
+    is only run at n = m = 1e5 (its 1e10-cell mask is already ~10^3× the
+    sweep's work); at n = m = 1e6 it would be 1e12 cells, so only the sweep
+    rows are reported there.
+    """
+    workloads = [
+        # (tag, maker, N, alpha, include_blocked)
+        ("uniform_n1e5_a100", make_uniform_workload, 100_000, 100.0, True),
+        ("clustered_n1e5_a10", make_clustered_workload, 100_000, 10.0, False),
+        ("uniform_n1e6_a1", make_uniform_workload, 1_000_000, 1.0, False),
+    ]
+    for tag, maker, n, alpha, include_blocked in workloads:
+        subs, upds = maker(jax.random.PRNGKey(4), n // 2, n // 2, alpha=alpha)
+        k = int(sbm_count(subs, upds, num_segments=16))
+        cap = round_up_pow2(k)
+        dt_count = _time(lambda: sbm_count(subs, upds, num_segments=16))
+        pairs, cnt = sbm_enumerate(subs, upds, max_pairs=cap, num_segments=16)
+        assert int(cnt) == k, (tag, int(cnt), k)
+        dt_sweep = _time(lambda: sbm_enumerate(subs, upds, max_pairs=cap,
+                                               num_segments=16))
+        rows.append(f"enum_count_{tag},{dt_count*1e6:.1f},K={k}")
+        rows.append(f"enum_sweep_{tag},{dt_sweep*1e6:.1f},K={k}")
+        if include_blocked:
+            # The O(n·m) oracle takes minutes per call: the correctness
+            # check doubles as the compile/warmup run, then time one rep.
+            _, cnt_b = jax.block_until_ready(
+                enumerate_matches(subs, upds, max_pairs=cap, block=2048))
+            assert int(cnt_b) == k, (tag, int(cnt_b), k)
+            t0 = time.perf_counter()
+            jax.block_until_ready(enumerate_matches(subs, upds,
+                                                    max_pairs=cap, block=2048))
+            dt_blocked = time.perf_counter() - t0
+            rows.append(f"enum_blocked_{tag},{dt_blocked*1e6:.1f},K={k}")
+            rows.append(f"enum_speedup_{tag},"
+                        f"{dt_blocked/dt_sweep:.1f},sweep_vs_blocked_x")
+
+
 def run(rows: List[str]) -> None:
     wct_vs_algorithm(rows)
     wct_vs_n(rows)
     wct_vs_alpha(rows)
     scan_impl_sweep(rows)
+    enumeration(rows)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    choices=["all", "enumeration", "algorithm", "n", "alpha",
+                             "scan"])
+    args = ap.parse_args()
+    fns = {"all": run, "enumeration": enumeration,
+           "algorithm": wct_vs_algorithm, "n": wct_vs_n,
+           "alpha": wct_vs_alpha, "scan": scan_impl_sweep}
+    rows: List[str] = []
+    print("name,us_per_call,derived")
+    fns[args.only](rows)
+    for r in rows:
+        print(r, flush=True)

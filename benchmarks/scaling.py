@@ -27,8 +27,8 @@ _WORKER = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
     import jax, jax.numpy as jnp
     from repro.core import make_uniform_workload, sbm_count_sharded
-    mesh = jax.make_mesh((p,), ("p",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import AxisType, make_mesh
+    mesh = make_mesh((p,), ("p",), axis_types=(AxisType.Auto,))
     subs, upds = make_uniform_workload(jax.random.PRNGKey(0), n // 2, n // 2,
                                        alpha=100.0)
     out = sbm_count_sharded(subs, upds, mesh, "p")
@@ -43,7 +43,7 @@ _WORKER = textwrap.dedent("""
     from jax.sharding import PartitionSpec as P
     from repro.core.sweep import (encode_endpoints, _indicator_deltas,
                                   _pad_stream, sbm_count_shard_body)
-    from jax import shard_map
+    from repro.compat import shard_map
     ep = _pad_stream(encode_endpoints(subs, upds), p)
     deltas = _indicator_deltas(ep)
     fn = shard_map(functools.partial(sbm_count_shard_body, axis_name="p"),

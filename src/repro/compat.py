@@ -1,0 +1,66 @@
+"""Version-compat shims for the moving jax API surface.
+
+The repo targets both the pinned 0.4.x toolchain and current jax releases:
+
+* ``shard_map`` moved from ``jax.experimental`` to the top level, and its
+  replication-check kwarg was renamed ``check_rep`` → ``check_vma``.
+* ``jax.make_mesh`` grew an ``axis_types`` kwarg (and ``jax.sharding
+  .AxisType``) with the explicit-sharding API; older versions have neither.
+
+Import ``shard_map`` / ``make_mesh`` / ``AxisType`` from here instead of
+from jax.
+"""
+import jax
+
+try:  # jax >= 0.5
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, check_vma=None, **kwargs):
+    """``jax.shard_map`` accepting ``check_vma`` on every jax version."""
+    if check_vma is None:
+        return _shard_map(f, **kwargs)
+    try:
+        return _shard_map(f, check_vma=check_vma, **kwargs)
+    except TypeError:  # pre-rename spelling
+        return _shard_map(f, check_rep=check_vma, **kwargs)
+
+
+try:  # jax >= 0.6 explicit-sharding API
+    from jax.sharding import AxisType  # type: ignore[attr-defined]  # noqa: F401
+except ImportError:
+    class AxisType:  # placeholder: pre-AxisType meshes are implicitly Auto
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def axis_size(axis_name):
+    """``lax.axis_size`` with the pre-0.5 fallback (psum of 1 constant-folds
+    to the mesh axis size)."""
+    import jax.lax as lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas TPU compiler params across the CompilerParams rename."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
+def make_mesh(axis_shapes, axis_names, axis_types=None):
+    """``jax.make_mesh`` dropping ``axis_types`` where unsupported (it only
+    selects the default sharding mode; old versions are always Auto)."""
+    if axis_types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=axis_types)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -8,7 +8,8 @@ Public surface:
   rank_count, per_sub_match_counts         — ITM's TPU-native analogue
   bf_count, bf_count_sharded               — brute force (Algorithm 2)
   grid_count                               — grid-based matching (§3.2)
-  enumerate_matches, match_matrix, ...     — pair/structure reporting
+  sbm_enumerate, sbm_enumerate_sharded     — sweep pair enumeration (O(K))
+  enumerate_matches, match_matrix, ...     — oracle/structure reporting
   DDMService                               — HLA-style service facade
 """
 from repro.core.intervals import (
@@ -42,6 +43,8 @@ from repro.core.enumerate import (
     enumerate_matches,
     enumerate_matches_ddim,
     enumerate_matches_sweep_numpy,
+    sbm_enumerate,
+    sbm_enumerate_sharded,
 )
 from repro.core.matrix import (
     match_matrix,
@@ -62,6 +65,7 @@ __all__ = [
     "rank_count", "rank_count_sharded", "per_sub_match_counts",
     "per_upd_match_counts", "bf_count", "bf_count_sharded", "grid_count",
     "enumerate_matches", "enumerate_matches_ddim", "enumerate_matches_sweep_numpy",
+    "sbm_enumerate", "sbm_enumerate_sharded",
     "match_matrix", "match_matrix_ddim", "row_index_lists",
     "block_extents_for_sequence", "block_mask_from_extents", "document_extents",
     "DDMService",

@@ -39,7 +39,7 @@ def bf_count_sharded(subs: Extents, upds: Extents, mesh, axis_name: str,
                      *, block: int = 1024):
     """Paper §3.1 parallel BF: subscriptions sharded, updates replicated."""
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
 
     # Pad to a shard multiple with inert [+inf, -inf] extents.
     num_shards = mesh.shape[axis_name]

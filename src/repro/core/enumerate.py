@@ -4,6 +4,22 @@ TPUs cannot append to a dynamically sized list (the paper's ``L ← L ∪ {..}``
 under an atomic).  The standard adaptation is count → prefix offsets →
 scatter: a first pass sizes the output, a second writes each pair to its
 precomputed slot.  Output buffers are padded to a static ``max_pairs``.
+
+Two engines behind the same (pairs, count) contract:
+
+* :func:`sbm_enumerate` — the sort-based sweep, output-sensitive
+  O((n+m)·log(n+m) + K).  Per-extent emission counts come from the same
+  indicator cumsums as :func:`repro.core.sweep.sbm_count`; their exclusive
+  scan is the offset table and a slot-parallel gather materializes the
+  pairs (DESIGN.md §3).  :func:`sbm_enumerate_sharded` runs the same scheme
+  across a device mesh axis; :func:`repro.kernels.sbm_enumerate_kernel` is
+  the Pallas on-chip form.
+* :func:`enumerate_matches` — blocked all-pairs O(n·m) + stream compaction.
+  Kept as the cross-check oracle and for tiny inputs where the sort
+  dominates.
+
+Overflow contract (all engines): pairs beyond ``max_pairs`` are dropped but
+still counted — callers check ``count <= max_pairs`` and retry bigger.
 """
 from __future__ import annotations
 
@@ -15,8 +31,192 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import prefix as prefix_lib
 from repro.core.intervals import Extents, intersect_1d
+from repro.core.sweep import (_indicator_deltas, _pad_stream,
+                              emission_rank_tables, encode_endpoints,
+                              rank_tables_from_cumsums, resolve_cumsum)
 
+
+def round_up_pow2(k: int) -> int:
+    """Power-of-two ``max_pairs`` buckets: bounded jit recompiles as K
+    drifts between calls (service queries, benchmark sweeps)."""
+    return max(8, 1 << (k - 1).bit_length())
+
+
+def _count_dtype():
+    """Pair counts accumulate in int64 under x64 (K can exceed 2^31 even
+    when every per-emitter count fits int32); int32 otherwise — the same
+    convention as :func:`repro.core.sweep.sbm_count`."""
+    return jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32
+
+
+def _empty_result(max_pairs: int):
+    return (jnp.full((max_pairs, 2), -1, jnp.int32),
+            jnp.zeros((), _count_dtype()))
+
+
+# ---------------------------------------------------------------------------
+# Sweep-based enumeration (the paper's emission phase, output-sensitive)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_pairs", "num_segments",
+                                             "scan_impl"))
+def _sbm_enumerate_jit(subs: Extents, upds: Extents, *, max_pairs: int,
+                       num_segments: int, scan_impl: str):
+    n = subs.lo.shape[0]
+    m = upds.lo.shape[0]
+    ep = _pad_stream(encode_endpoints(subs, upds), num_segments)
+    cumsum_fn = resolve_cumsum(scan_impl, num_segments)
+    a_start, a_cnt, b_start, b_cnt, subs_by_lo, upds_by_lo = \
+        emission_rank_tables(ep, n, m, cumsum_fn)
+
+    # Offset table: exclusive scan of per-emitter counts (emitters are the
+    # n subs then the m upds; the scan is over n+m entries, not the stream).
+    # Without x64 the int32 wrap at K >= 2^31 is a repo-wide limit.
+    counts = jnp.concatenate([a_cnt, b_cnt])
+    off = jnp.cumsum(counts, dtype=_count_dtype())
+    k_total = off[-1]
+
+    # Slot-parallel emission: slot s belongs to the emitter whose offset
+    # range contains it; its rank within the emitter selects the counterpart
+    # by lower-endpoint rank (a contiguous range — see emission_rank_tables).
+    slots = jnp.arange(max_pairs, dtype=jnp.int32)
+    e = jnp.searchsorted(off, slots, side="right").astype(jnp.int32)
+    e = jnp.minimum(e, n + m - 1)
+    r = slots - (off[e] - counts[e])
+    is_a = e < n
+    j_of_a = upds_by_lo[jnp.clip(a_start[jnp.minimum(e, n - 1)] + r, 0, m - 1)]
+    i_of_b = subs_by_lo[jnp.clip(b_start[jnp.clip(e - n, 0, m - 1)] + r,
+                                 0, n - 1)]
+    pi = jnp.where(is_a, e, i_of_b)
+    pj = jnp.where(is_a, j_of_a, e - n)
+    valid = slots < jnp.minimum(k_total, max_pairs)
+    pairs = jnp.where(valid[:, None], jnp.stack([pi, pj], axis=-1), -1)
+    return pairs, k_total
+
+
+def sbm_enumerate(subs: Extents, upds: Extents, *, max_pairs: int,
+                  num_segments: int = 8, scan_impl: str = "two_level"
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """All matching (i, j) pairs via the sort-based sweep (1-d extents).
+
+    Output-sensitive O((n+m)·log(n+m) + K): no n×m intermediate is ever
+    formed.  Returns (pairs (max_pairs, 2) int32 padded with (-1, -1),
+    count) with the same overflow contract as :func:`enumerate_matches`.
+    Deterministic order: subscription emitters by id, then update emitters
+    by id, each range ordered by the counterpart's lower-endpoint rank.
+    Requires well-formed extents (lo <= hi) — like :func:`sbm_count`.
+    """
+    if subs.lo.shape[0] == 0 or upds.lo.shape[0] == 0:
+        return _empty_result(max_pairs)
+    return _sbm_enumerate_jit(subs, upds, max_pairs=max_pairs,
+                              num_segments=num_segments, scan_impl=scan_impl)
+
+
+def sbm_enumerate_sharded(subs: Extents, upds: Extents, mesh, axis_name: str,
+                          *, max_pairs: int,
+                          max_pairs_per_shard: int | None = None
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Distributed sweep enumeration over one mesh axis.
+
+    Mirrors :func:`repro.core.sweep.sbm_count_sharded`: the sorted stream is
+    split into contiguous shards, global indicator cumsums run as the
+    distributed two-level scan, and each shard emits the pairs whose
+    emitting upper endpoint it owns into a local buffer.  Global pair
+    offsets are the psum'd/all-gathered per-shard emission totals; the final
+    (max_pairs, 2) buffer is stitched from the per-shard buffers by those
+    offsets.  The rank→id tables are psum-combined (O(n+m) comm — the pair
+    payload itself is the dominant output).
+
+    Per-shard buffers hold ``max_pairs_per_shard`` (default ``max_pairs``)
+    pairs; a shard emitting more drops the excess but the returned count is
+    still exact.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+
+    n = subs.lo.shape[0]
+    m = upds.lo.shape[0]
+    if n == 0 or m == 0:
+        return _empty_result(max_pairs)
+    cdtype = _count_dtype()
+    cap = max_pairs if max_pairs_per_shard is None else max_pairs_per_shard
+    num_shards = mesh.shape[axis_name]
+    ep = _pad_stream(encode_endpoints(subs, upds), num_shards)
+    sub_lo, sub_up, upd_lo, upd_up = _indicator_deltas(ep)
+    owner = ep.owner
+    is_upper = ep.is_upper.astype(jnp.int32)
+    is_sub = ep.is_sub.astype(jnp.int32)
+
+    def body(sub_lo, upd_lo, owner, is_upper, is_sub):
+        # Stream-position cumsums are bounded by the stream length and
+        # always fit int32 (unlike the pair counts below); pin the dtype so
+        # the rank-table scatters stay int32 under x64.
+        c_sub_lo = prefix_lib.shard_inclusive_cumsum(
+            sub_lo, axis_name).astype(jnp.int32)
+        c_upd_lo = prefix_lib.shard_inclusive_cumsum(
+            upd_lo, axis_name).astype(jnp.int32)
+
+        # Rank tables: the same class-A/B construction as the single-device
+        # path; each extent's endpoints live on some shard, so the psum
+        # combine assembles the full (n,)/(m,) tables on every shard.
+        a_start, a_cnt, b_start, b_cnt, subs_by_lo, upds_by_lo = \
+            rank_tables_from_cumsums(
+                is_sub == 1, is_upper == 1, owner, c_sub_lo, c_upd_lo, n, m,
+                combine=lambda t: lax.psum(t, axis_name))
+
+        # local emission: one count per local upper endpoint (the emitter's
+        # class count, gathered from the global tables at its owner)
+        real = owner >= 0
+        sel_s_up = (is_sub == 1) & (is_upper == 1) & real
+        sel_u_up = (is_sub == 0) & (is_upper == 1) & real
+        o_c = jnp.clip(owner, 0)
+        cnt = jnp.where(sel_s_up, a_cnt[jnp.minimum(o_c, n - 1)], 0)
+        cnt = cnt + jnp.where(sel_u_up, b_cnt[jnp.minimum(o_c, m - 1)], 0)
+        lc = jnp.cumsum(cnt, dtype=cdtype)   # global K may exceed int32
+        local_total = lc[-1]
+        base = prefix_lib.shard_exclusive_offsets(local_total, axis_name)
+        k_total = lax.psum(local_total, axis_name)
+
+        slots = jnp.arange(cap, dtype=jnp.int32)
+        epos = jnp.searchsorted(lc, slots, side="right").astype(jnp.int32)
+        epos = jnp.minimum(epos, lc.shape[0] - 1)
+        r = slots - (lc[epos] - cnt[epos])
+        o = jnp.clip(owner[epos], 0)
+        emitter_is_sub = sel_s_up[epos]
+        j_of_a = upds_by_lo[jnp.clip(a_start[jnp.minimum(o, n - 1)] + r,
+                                     0, m - 1)]
+        i_of_b = subs_by_lo[jnp.clip(b_start[jnp.minimum(o, m - 1)] + r,
+                                     0, n - 1)]
+        pi = jnp.where(emitter_is_sub, o, i_of_b)
+        pj = jnp.where(emitter_is_sub, j_of_a, o)
+        lvalid = slots < local_total
+        buf = jnp.where(lvalid[:, None], jnp.stack([pi, pj], axis=-1), -1)
+        return (buf, base.reshape(1).astype(cdtype),
+                local_total.reshape(1).astype(cdtype), k_total)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis_name), P(axis_name), P(axis_name),
+                             P(axis_name), P(axis_name)),
+                   out_specs=(P(axis_name), P(axis_name), P(axis_name), P()))
+    buf, base, local_totals, k_total = fn(sub_lo, upd_lo, owner, is_upper,
+                                          is_sub)
+    bufs = buf.reshape(num_shards, cap, 2)
+    incl = base + local_totals                      # per-shard global ranges
+    slots = jnp.arange(max_pairs, dtype=jnp.int32)
+    p = jnp.minimum(jnp.searchsorted(incl, slots, side="right"),
+                    num_shards - 1).astype(jnp.int32)
+    r = slots - base[p]
+    valid = (slots < jnp.minimum(k_total, max_pairs)) & (r < cap)
+    pairs = jnp.where(valid[:, None],
+                      bufs[p, jnp.clip(r, 0, cap - 1)], -1)
+    return pairs, k_total
+
+
+# ---------------------------------------------------------------------------
+# Blocked all-pairs enumeration — the cross-check oracle
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("max_pairs", "block"))
 def enumerate_matches(subs: Extents, upds: Extents, *, max_pairs: int,
@@ -26,6 +226,7 @@ def enumerate_matches(subs: Extents, upds: Extents, *, max_pairs: int,
     Blocked all-pairs test + stream compaction: within each subscription
     block the match mask is compacted with a prefix sum; a scan carries the
     global write pointer across blocks (deterministic order: by (i, j)).
+    O(n·m) — the oracle the sweep engines are tested against.
     Returns (pairs (max_pairs, 2) int32, count).  Pairs beyond ``max_pairs``
     are dropped but still counted — callers check ``count <= max_pairs``.
     """
@@ -60,8 +261,8 @@ def enumerate_matches(subs: Extents, upds: Extents, *, max_pairs: int,
 def enumerate_matches_sweep_numpy(subs: Extents, upds: Extents) -> np.ndarray:
     """Host-side O(N log N + K) enumeration via the sequential sweep.
 
-    Used by the DDM service for large instances where the blocked all-pairs
-    pass would be wasteful; matches :func:`enumerate_matches` as a set.
+    The serial Algorithm-4 baseline for the device engines; matches
+    :func:`enumerate_matches` as a set.
     """
     from repro.core.sweep import sequential_sbm_pairs_numpy
     pairs = sorted(sequential_sbm_pairs_numpy(subs, upds))
@@ -70,14 +271,33 @@ def enumerate_matches_sweep_numpy(subs: Extents, upds: Extents) -> np.ndarray:
     return np.asarray(pairs, np.int32)
 
 
+# ---------------------------------------------------------------------------
+# d-dimensional composition (paper §3: match on dim 0, filter on the rest)
+# ---------------------------------------------------------------------------
+
 def enumerate_matches_ddim(subs: Extents, upds: Extents, *, max_pairs: int,
-                           block: int = 256):
+                           block: int = 256, method: str = "sweep",
+                           num_segments: int = 8):
     """d-dimensional enumeration: dim-0 candidates filtered by dims 1..d-1
-    (paper §3: d-rectangles overlap iff every projection overlaps)."""
+    (paper §3: d-rectangles overlap iff every projection overlaps).
+
+    ``method``: 'sweep' (default) dispatches the dim-0 candidate pass to the
+    output-sensitive :func:`sbm_enumerate`; 'blocked' keeps the all-pairs
+    oracle.  ``max_pairs`` must bound the *dim-0* match count (candidates
+    before filtering); the returned count is the post-filter pair count.
+    """
+    if method == "sweep":
+        def dim0(a, b):
+            return sbm_enumerate(a, b, max_pairs=max_pairs,
+                                 num_segments=num_segments)
+    elif method == "blocked":
+        def dim0(a, b):
+            return enumerate_matches(a, b, max_pairs=max_pairs, block=block)
+    else:
+        raise ValueError(f"unknown method {method!r}")
     if subs.ndim_space == 1:
-        return enumerate_matches(subs, upds, max_pairs=max_pairs, block=block)
-    pairs, count = enumerate_matches(subs.dim(0), upds.dim(0),
-                                     max_pairs=max_pairs, block=block)
+        return dim0(subs, upds)
+    pairs, count = dim0(subs.dim(0), upds.dim(0))
     valid = pairs[:, 0] >= 0
     i = jnp.maximum(pairs[:, 0], 0)
     j = jnp.maximum(pairs[:, 1], 0)

@@ -119,9 +119,12 @@ def delta_combine_bits(e1: Tuple[jax.Array, jax.Array],
 def delta_scan_exclusive(add: jax.Array, rem: jax.Array):
     """Exclusive scan of per-segment delta sets.
 
-    ``add``/``rem``: (P, n) boolean masks — Algorithm 6's Sadd[p]/Sdel[p].
-    Returns ``active``: (P, n) boolean — SubSet[p], the active set *entering*
+    ``add``/``rem``: (P, n) boolean masks — Algorithm 6's Sadd[p]/Sdel[p] —
+    or (P, W) packed uint32 words (the combine is elementwise bitwise, so
+    both representations share this one implementation).  Returns
+    ``active``: same shape/dtype — SubSet[p], the active set *entering*
     segment p (paper: the value sequential SBM has right after T_{p-1}).
+    For the Pallas emission pass this is each block's starting VMEM mask.
     """
     inc_a, _inc_d = lax.associative_scan(
         lambda e1, e2: delta_combine_bool(e1, e2), (add, rem), axis=0)

@@ -60,7 +60,7 @@ def rank_count_sharded(subs: Extents, upds: Extents, mesh, axis_name: str):
     interval tree); subscription queries are sharded; a final psum reduces.
     """
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
 
     u_lo_sorted = jnp.sort(upds.lo)
     u_hi_sorted = jnp.sort(upds.hi)

@@ -1,11 +1,13 @@
 """DDM service — the HLA-style Data Distribution Management facade.
 
 Stateful register/modify/unregister of subscription and update regions,
-matching (full and incremental), and event routing — the service the paper's
-algorithm exists to accelerate.  Matching dispatches to the parallel SBM
-sweep for counting and to the rank/enumeration paths for pair reporting;
-*dynamic* re-matching (extents moving, per Pan et al. [20]) recomputes only
-the moved extents against the stationary set.
+matching, and event routing — the service the paper's algorithm exists to
+accelerate.  Pair reporting dispatches to the *sweep* enumeration engine
+(:func:`repro.core.enumerate.sbm_enumerate`), so a full-match query is
+output-sensitive O((n+m)·log(n+m) + K) and never materializes the n×m match
+matrix; single-region queries are one O(n·d) comparison row.  The blocked
+all-pairs path (``repro.core.matrix`` / ``repro.core.enumerate
+.enumerate_matches``) remains the cross-check oracle in the test suite.
 
 The service is a host-level object (simulation control plane); the heavy
 lifting runs in jitted JAX.
@@ -13,16 +15,14 @@ lifting runs in jitted JAX.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Sequence, Set, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.intervals import Extents
-from repro.core import matrix as matrix_lib
-from repro.core import rank as rank_lib
+from repro.core import enumerate as enumerate_lib
 from repro.core import sweep as sweep_lib
+from repro.core.intervals import Extents
 
 
 @dataclasses.dataclass
@@ -34,9 +34,8 @@ class _RegionTable:
 
     @classmethod
     def create(cls, d: int, capacity: int) -> "_RegionTable":
-        # Dead slots are [+inf, -inf]: inert for every matcher, including the
-        # endpoint sweep (the -inf upper sorts first and emits nothing; the
-        # +inf lower sorts last and is never emitted against).
+        # Dead slots are [+inf, -inf]: inert for every matcher — any
+        # closed-interval overlap test against them is False.
         return cls(
             lo=np.full((d, capacity), np.inf, np.float32),
             hi=np.full((d, capacity), -np.inf, np.float32),
@@ -67,11 +66,19 @@ class _RegionTable:
         self.lo[:, rid] = lo
         self.hi[:, rid] = hi
 
-    def extents(self) -> Extents:
-        d = self.lo.shape[0]
-        if d == 1:
-            return Extents(jnp.asarray(self.lo[0]), jnp.asarray(self.hi[0]))
-        return Extents(jnp.asarray(self.lo), jnp.asarray(self.hi))
+    def live_ids(self) -> np.ndarray:
+        return np.nonzero(self.live)[0]
+
+    def compact(self, ids: np.ndarray) -> Extents:
+        """Live extents only (the sweep precondition: lo <= hi)."""
+        if self.lo.shape[0] == 1:
+            return Extents(jnp.asarray(self.lo[0, ids]),
+                           jnp.asarray(self.hi[0, ids]))
+        return Extents(jnp.asarray(self.lo[:, ids]),
+                       jnp.asarray(self.hi[:, ids]))
+
+
+_round_up_pow2 = enumerate_lib.round_up_pow2
 
 
 class DDMService:
@@ -88,104 +95,95 @@ class DDMService:
         self.dims = dims
         self._subs = _RegionTable.create(dims, capacity)
         self._upds = _RegionTable.create(dims, capacity)
-        self._mask: Optional[np.ndarray] = None  # (cap_s, cap_u) match matrix
-        self._dirty = True
 
     # -- registration -----------------------------------------------------
     def register_subscription(self, lo, hi) -> int:
-        rid = self._subs.insert(np.atleast_1d(lo), np.atleast_1d(hi))
-        self._dirty = True
-        return rid
+        return self._subs.insert(np.atleast_1d(lo), np.atleast_1d(hi))
 
     def register_update(self, lo, hi) -> int:
-        rid = self._upds.insert(np.atleast_1d(lo), np.atleast_1d(hi))
-        self._dirty = True
-        return rid
+        return self._upds.insert(np.atleast_1d(lo), np.atleast_1d(hi))
 
     def unregister_subscription(self, rid: int) -> None:
-        self._subs.remove(rid)
-        if self._mask is not None:
-            self._mask[rid, :] = False
-        # no full rematch needed: an empty extent matches nothing
+        self._subs.remove(rid)   # dead slots are inert sentinels
 
     def unregister_update(self, rid: int) -> None:
         self._upds.remove(rid)
-        if self._mask is not None:
-            self._mask[:, rid] = False
 
-    # -- dynamic DDM (Pan et al. [20]): move/resize with incremental rematch
+    # -- dynamic DDM (Pan et al. [20]): moved regions just overwrite their
+    # slot; queries are stateless over the sweep so no rematch bookkeeping.
     def move_subscription(self, rid: int, lo, hi) -> None:
         self._subs.move(rid, np.atleast_1d(lo), np.atleast_1d(hi))
-        if self._mask is not None:
-            row = np.array(matrix_lib.match_matrix_ddim(
-                _single(self._subs, rid, self.dims), self._upds.extents()))[0]
-            row &= self._upds.live
-            self._mask[rid, :] = row
-        else:
-            self._dirty = True
 
     def move_update(self, rid: int, lo, hi) -> None:
         self._upds.move(rid, np.atleast_1d(lo), np.atleast_1d(hi))
-        if self._mask is not None:
-            col = np.array(matrix_lib.match_matrix_ddim(
-                self._subs.extents(), _single(self._upds, rid, self.dims)))[:, 0]
-            col &= self._subs.live
-            self._mask[:, rid] = col
-        else:
-            self._dirty = True
 
     # -- matching ----------------------------------------------------------
-    def _ensure_matched(self) -> None:
-        if self._dirty or self._mask is None:
-            mask = np.array(matrix_lib.match_matrix_ddim(
-                self._subs.extents(), self._upds.extents()))
-            mask &= self._subs.live[:, None]
-            mask &= self._upds.live[None, :]
-            self._mask = mask
-            self._dirty = False
-
     def match_count(self) -> int:
-        """K — delegated to the parallel SBM sweep for d == 1.
+        """K — the parallel SBM counting sweep over live regions.
 
-        The sweep's precondition is well-formed intervals (lo ≤ hi), so the
-        live extents are compacted first (dead slots are inverted sentinels).
+        d > 1 uses the dim-0 sweep with pair-level filtering on the other
+        projections (paper §3), via the same path as :meth:`all_pairs`.
         """
+        sl = self._subs.live_ids()
+        ul = self._upds.live_ids()
+        if sl.size == 0 or ul.size == 0:
+            return 0
+        subs = self._subs.compact(sl)
+        upds = self._upds.compact(ul)
         if self.dims == 1:
-            sl = self._subs.live
-            ul = self._upds.live
-            subs = Extents(jnp.asarray(self._subs.lo[0][sl]),
-                           jnp.asarray(self._subs.hi[0][sl]))
-            upds = Extents(jnp.asarray(self._upds.lo[0][ul]),
-                           jnp.asarray(self._upds.hi[0][ul]))
-            if subs.size == 0 or upds.size == 0:
-                return 0
             return int(sweep_lib.sbm_count(subs, upds))
-        self._ensure_matched()
-        return int(self._mask.sum())
+        k0 = int(sweep_lib.sbm_count(subs.dim(0), upds.dim(0)))
+        if k0 == 0:
+            return 0
+        _, count = enumerate_lib.enumerate_matches_ddim(
+            subs, upds, max_pairs=_round_up_pow2(k0), method="sweep")
+        return int(count)   # scalar only — the pair buffer never leaves device
 
-    def matches_for_update(self, rid: int) -> List[int]:
-        self._ensure_matched()
-        return np.nonzero(self._mask[:, rid])[0].tolist()
-
-    def matches_for_subscription(self, rid: int) -> List[int]:
-        self._ensure_matched()
-        return np.nonzero(self._mask[rid, :])[0].tolist()
+    def _sweep_pairs(self, subs: Extents, upds: Extents):
+        """(i, j) index pairs over compacted live extents via the sweep."""
+        if self.dims == 1:
+            k = int(sweep_lib.sbm_count(subs, upds))
+        else:
+            k = int(sweep_lib.sbm_count(subs.dim(0), upds.dim(0)))
+        if k == 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64), 0
+        pairs, count = enumerate_lib.enumerate_matches_ddim(
+            subs, upds, max_pairs=_round_up_pow2(k), method="sweep")
+        arr = np.asarray(pairs)
+        arr = arr[arr[:, 0] >= 0]
+        return arr[:, 0], arr[:, 1], int(count)
 
     def all_pairs(self) -> Set[Tuple[int, int]]:
-        self._ensure_matched()
-        ii, jj = np.nonzero(self._mask)
-        return set(zip(ii.tolist(), jj.tolist()))
+        """Every matching (subscription rid, update rid) — sweep enumeration."""
+        sl = self._subs.live_ids()
+        ul = self._upds.live_ids()
+        if sl.size == 0 or ul.size == 0:
+            return set()
+        ii, jj, _ = self._sweep_pairs(self._subs.compact(sl),
+                                      self._upds.compact(ul))
+        return set(zip(sl[ii].tolist(), ul[jj].tolist()))
+
+    def _row_matches(self, table: _RegionTable, lo: np.ndarray,
+                     hi: np.ndarray) -> List[int]:
+        """Live ids of ``table`` whose extents overlap [lo, hi] (one row)."""
+        ids = table.live_ids()
+        if ids.size == 0:
+            return []
+        mask = np.ones(ids.size, bool)
+        for d in range(self.dims):
+            mask &= (table.lo[d, ids] <= hi[d]) & (lo[d] <= table.hi[d, ids])
+        return ids[mask].tolist()
+
+    def matches_for_update(self, rid: int) -> List[int]:
+        return self._row_matches(self._subs, self._upds.lo[:, rid],
+                                 self._upds.hi[:, rid])
+
+    def matches_for_subscription(self, rid: int) -> List[int]:
+        return self._row_matches(self._upds, self._subs.lo[:, rid],
+                                 self._subs.hi[:, rid])
 
     # -- routing -----------------------------------------------------------
     def route(self, update_rid: int, payload) -> Dict[int, object]:
         """Deliver ``payload`` from an update region to every matching
         subscription (the DDM send path)."""
         return {sid: payload for sid in self.matches_for_update(update_rid)}
-
-
-def _single(table: _RegionTable, rid: int, dims: int) -> Extents:
-    if dims == 1:
-        return Extents(jnp.asarray(table.lo[0, rid:rid + 1]),
-                       jnp.asarray(table.hi[0, rid:rid + 1]))
-    return Extents(jnp.asarray(table.lo[:, rid:rid + 1]),
-                   jnp.asarray(table.hi[:, rid:rid + 1]))

@@ -111,6 +111,22 @@ def _pad_stream(ep: EndpointStream, multiple: int) -> EndpointStream:
     # (emission only happens at upper endpoints, all of which precede it).
 
 
+def resolve_cumsum(scan_impl: str, num_segments: int):
+    """Inclusive-cumsum primitive for a named scan backend.
+
+    ``scan_impl``: 'two_level' (paper Fig. 5), 'blelloch' (tree scan), or
+    'xla' (monolithic ``jnp.cumsum`` — the serial-scan reference).
+    """
+    if scan_impl == "two_level":
+        return functools.partial(prefix_lib.cumsum_two_level,
+                                 num_segments=num_segments)
+    if scan_impl == "blelloch":
+        return prefix_lib.cumsum_blelloch
+    if scan_impl == "xla":
+        return functools.partial(jnp.cumsum, axis=-1)
+    raise ValueError(f"unknown scan_impl {scan_impl!r}")
+
+
 @functools.partial(jax.jit, static_argnames=("num_segments", "scan_impl"))
 def sbm_count(subs: Extents, upds: Extents, *, num_segments: int = 8,
               scan_impl: str = "two_level") -> jax.Array:
@@ -121,15 +137,7 @@ def sbm_count(subs: Extents, upds: Extents, *, num_segments: int = 8,
     """
     ep = _pad_stream(encode_endpoints(subs, upds), num_segments)
     sub_lo, sub_up, upd_lo, upd_up = _indicator_deltas(ep)
-    if scan_impl == "two_level":
-        cumsum_fn = functools.partial(prefix_lib.cumsum_two_level,
-                                      num_segments=num_segments)
-    elif scan_impl == "blelloch":
-        cumsum_fn = prefix_lib.cumsum_blelloch
-    elif scan_impl == "xla":
-        cumsum_fn = functools.partial(jnp.cumsum, axis=-1)
-    else:
-        raise ValueError(f"unknown scan_impl {scan_impl!r}")
+    cumsum_fn = resolve_cumsum(scan_impl, num_segments)
     emit = _emission_counts(sub_lo, sub_up, upd_lo, upd_up, cumsum_fn)
     return jnp.sum(emit).astype(jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32)
 
@@ -148,6 +156,78 @@ def sbm_active_profile(subs: Extents, upds: Extents, *, num_segments: int = 8):
     active_sub = cumsum_fn(sub_lo) - cumsum_fn(sub_up)
     active_upd = cumsum_fn(upd_lo) - cumsum_fn(upd_up)
     return ep, active_sub, active_upd
+
+
+# --------------------------------------------------------------------------
+# Emission ranks — the offset side of sweep-based pair *enumeration*
+# --------------------------------------------------------------------------
+
+def rank_tables_from_cumsums(is_sub, is_upper, owner, c_sub_lo, c_upd_lo,
+                             n: int, m: int, combine=lambda t: t):
+    """Per-extent emission ranges from the two lower-indicator cumsums.
+
+    Position-space form of the emission phase (DESIGN.md §3).  In the sorted
+    stream every endpoint has a unique position, so "pair (i, j) overlaps" is
+    exactly "the later of the two lower endpoints falls strictly inside the
+    other extent's position interval".  Partitioning pairs by which extent
+    opens later makes each extent's emission set a *contiguous rank range*
+    over the counterpart type's lower endpoints:
+
+      class A (upd opens later):  j ∈ upds_by_lo[a_start[i] : a_start[i]+a_count[i]]
+      class B (sub opens later):  i ∈ subs_by_lo[b_start[j] : b_start[j]+b_count[j]]
+
+    where ``a_start[i]``/``a_count[i]`` are the counterpart-lower cumsum
+    evaluated at S_i's two endpoint positions (and symmetrically for B), and
+    ``*_by_lo`` maps a lower-endpoint rank back to the owning extent id.
+    Each overlapping pair lands in exactly one class, so
+    ``sum(a_count) + sum(b_count) = K``, matching :func:`_emission_counts`.
+
+    ``is_sub``/``is_upper``: bool, ``owner``: int32 (>= 0 real, < 0 pad),
+    ``c_*_lo``: int32 *global* inclusive cumsums — all aligned with the
+    (possibly sharded) stream slice this caller holds.  ``combine`` folds
+    each locally-scattered table into the global one: identity when the
+    caller holds the whole stream, a psum over the mesh axis inside
+    shard_map where each shard holds a contiguous slice.
+    """
+    real = owner >= 0   # padding records never contribute a table entry
+
+    def scatter(count, sel, vals):
+        idx = jnp.where(sel, owner, count)
+        return combine(jnp.zeros((count,), jnp.int32).at[idx].set(
+            jnp.where(sel, vals, 0), mode="drop"))
+
+    sel_s_lo = is_sub & ~is_upper & real
+    sel_s_up = is_sub & is_upper & real
+    sel_u_lo = ~is_sub & ~is_upper & real
+    sel_u_up = ~is_sub & is_upper & real
+
+    a_start = scatter(n, sel_s_lo, c_upd_lo)   # upd lowers before S_i opens
+    a_end = scatter(n, sel_s_up, c_upd_lo)     # upd lowers before S_i closes
+    b_start = scatter(m, sel_u_lo, c_sub_lo)
+    b_end = scatter(m, sel_u_up, c_sub_lo)
+
+    # rank → extent id (c_*_lo - 1 is this lower endpoint's 0-based rank)
+    subs_by_lo = combine(jnp.zeros((n,), jnp.int32).at[
+        jnp.where(sel_s_lo, c_sub_lo - 1, n)].set(
+        jnp.where(sel_s_lo, owner, 0), mode="drop"))
+    upds_by_lo = combine(jnp.zeros((m,), jnp.int32).at[
+        jnp.where(sel_u_lo, c_upd_lo - 1, m)].set(
+        jnp.where(sel_u_lo, owner, 0), mode="drop"))
+    return a_start, a_end - a_start, b_start, b_end - b_start, \
+        subs_by_lo, upds_by_lo
+
+
+def emission_rank_tables(ep: EndpointStream, n: int, m: int, cumsum_fn):
+    """:func:`rank_tables_from_cumsums` over a whole sorted stream.
+
+    Computes the two lower-indicator cumsums with the supplied scan backend
+    (the same four-cumsum machinery as the counting sweep) and builds the
+    per-extent tables.  Requires well-formed extents (lo <= hi).
+    """
+    sub_lo, _sub_up, upd_lo, _upd_up = _indicator_deltas(ep)
+    return rank_tables_from_cumsums(
+        ep.is_sub, ep.is_upper, ep.owner,
+        cumsum_fn(sub_lo), cumsum_fn(upd_lo), n, m)
 
 
 # --------------------------------------------------------------------------
@@ -223,7 +303,7 @@ def sbm_count_sharded(subs: Extents, upds: Extents, mesh, axis_name: str):
     carry crosses devices via the two-level scan (all_gather of partials).
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
 
     num_shards = mesh.shape[axis_name]
     ep = _pad_stream(encode_endpoints(subs, upds), num_shards)

@@ -9,9 +9,10 @@
 from repro.kernels.ops import (
     sbm_count_kernel,
     sbm_delta_bitmasks,
+    sbm_enumerate_kernel,
     flash_attention,
     build_block_structure,
 )
 
-__all__ = ["sbm_count_kernel", "sbm_delta_bitmasks", "flash_attention",
-           "build_block_structure"]
+__all__ = ["sbm_count_kernel", "sbm_delta_bitmasks", "sbm_enumerate_kernel",
+           "flash_attention", "build_block_structure"]

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1.0e30  # finite mask value: keeps exp() well-defined on dead rows
 _LANES = 128       # m/l scratch replicated across VPU lanes
 
@@ -163,7 +165,7 @@ def flash_attention_kernel(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(kv_index, kv_count, q, k, v, q_segments, kv_segments)

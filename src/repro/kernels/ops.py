@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import matrix as matrix_lib
+from repro.core import prefix as prefix_lib
 from repro.core.intervals import Extents
 from repro.core.sweep import encode_endpoints, _indicator_deltas, _pad_stream
 from repro.kernels import flash_attention as fa
@@ -58,6 +59,86 @@ def sbm_delta_bitmasks(subs: Extents, upds: Extents, *, block_size: int = 1024,
         ep.owner, up, valid_u, num_words=max(uw, 1), block_size=block_size,
         interpret=interpret)
     return (sadd, sdel, uadd, udel)
+
+
+@functools.partial(jax.jit, static_argnames=("max_pairs", "cap"))
+def _stitch_blocks(out_i, out_j, block_sums, k_total, *, max_pairs: int,
+                   cap: int):
+    """Final (max_pairs, 2) buffer from per-block emission regions.
+
+    Slot s lives in the block whose exclusive pair-offset range contains it
+    (the output-space analogue of the counting master step).
+    """
+    num_blocks = out_i.shape[0]
+    incl = jnp.cumsum(block_sums)
+    slots = jnp.arange(max_pairs, dtype=jnp.int32)
+    b = jnp.minimum(jnp.searchsorted(incl, slots, side="right"),
+                    num_blocks - 1).astype(jnp.int32)
+    r = slots - (incl[b] - block_sums[b])
+    valid = (slots < jnp.minimum(k_total, max_pairs)) & (r < cap)
+    r = jnp.clip(r, 0, cap - 1)
+    pairs = jnp.stack([out_i[b, r], out_j[b, r]], axis=-1)
+    return jnp.where(valid[:, None], pairs, -1)
+
+
+def sbm_enumerate_kernel(subs: Extents, upds: Extents, *, max_pairs: int,
+                         block_size: int = 512,
+                         max_pairs_per_block: Optional[int] = None,
+                         interpret: Optional[bool] = None
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """All matching (i, j) pairs via the three-pass Pallas sweep.
+
+    Pass A/B (counting kernel) size the output: per-block emission totals
+    and their exclusive scan are the cross-block pair offsets.  The bitmask
+    delta pass plus the Algorithm-6 monoid combine seed each block's active
+    sets, and pass C walks those VMEM bitmasks at every upper endpoint,
+    scattering pairs into per-block regions that are stitched by the offset
+    table.  Same contract as :func:`repro.core.sbm_enumerate` (pairs padded
+    with -1; count exact even past ``max_pairs``).
+
+    ``max_pairs_per_block`` is the static per-block region size; by default
+    it is sized from the observed maximum block total (one host sync + one
+    recompile per new high-water mark).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n, m = subs.lo.shape[0], upds.lo.shape[0]
+    if n == 0 or m == 0:
+        return jnp.full((max_pairs, 2), -1, jnp.int32), jnp.int32(0)
+
+    ep = _pad_stream(encode_endpoints(subs, upds), block_size)
+    deltas = jnp.stack(_indicator_deltas(ep))
+    emit, k_total = sweep_kernels.sweep_count_pallas(
+        deltas, block_size=block_size, interpret=interpret)
+    block_sums = emit.reshape(-1, block_size).sum(axis=-1)
+    if max_pairs_per_block is None:
+        cap = max(int(jnp.max(block_sums)), 1)
+    else:
+        cap = max_pairs_per_block
+
+    up = ep.is_upper.astype(jnp.int32)
+    sb = ep.is_sub.astype(jnp.int32)
+    valid = (ep.owner >= 0).astype(jnp.int32)
+    valid_s = (ep.is_sub & (ep.owner >= 0)).astype(jnp.int32)
+    valid_u = (~ep.is_sub & (ep.owner >= 0)).astype(jnp.int32)
+    ws = max(-(-n // 32), 1)
+    wu = max(-(-m // 32), 1)
+    sadd, sdel = sweep_kernels.delta_bitmasks_pallas(
+        ep.owner, up, valid_s, num_words=ws, block_size=block_size,
+        interpret=interpret)
+    uadd, udel = sweep_kernels.delta_bitmasks_pallas(
+        ep.owner, up, valid_u, num_words=wu, block_size=block_size,
+        interpret=interpret)
+    sub_active0 = prefix_lib.delta_scan_exclusive(sadd, sdel)
+    upd_active0 = prefix_lib.delta_scan_exclusive(uadd, udel)
+
+    out_i, out_j = sweep_kernels.sweep_emit_pairs_pallas(
+        jnp.clip(ep.owner, 0, None), up, sb, valid,
+        sub_active0, upd_active0, block_size=block_size, cap=cap,
+        interpret=interpret)
+    pairs = _stitch_blocks(out_i, out_j, block_sums, k_total,
+                           max_pairs=max_pairs, cap=cap)
+    return pairs, k_total
 
 
 # ---------------------------------------------------------------------------

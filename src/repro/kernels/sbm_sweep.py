@@ -21,6 +21,16 @@ Two kernel families:
   bitwise ops, replacing the paper's std::set.  The per-segment parallelism
   is across grid blocks, exactly like the paper's per-thread segments.
 
+* **Pair-emission pass C** (the paper's Algorithm 4 emission, set form):
+  extends the counting sweep from "how many pairs" to "which pairs".  Each
+  grid block re-runs its segment's sequential scan with *active-set*
+  bitmasks in VMEM scratch (seeded by the monoid-combined Add/Del deltas of
+  the bitmask pass), and at every upper endpoint walks the counterpart
+  bitmask emitting (i, j) records at consecutive slots of a per-block
+  output region.  The cross-block pair offsets are the host-side exclusive
+  scan of pass B's per-block emission totals — the same two-level scheme as
+  the counting master step, applied to the output space.
+
 Block shapes: endpoint blocks are (BLOCK,) int32 lanes with BLOCK a multiple
 of 128 (VPU lane width); bitmask scratch is ceil(n/32) uint32 words — 1M
 intervals ≈ 128 KiB of VMEM, well within the ~16 MiB/core budget.
@@ -185,3 +195,134 @@ def delta_bitmasks_pallas(owner: jax.Array, is_upper: jax.Array,
         interpret=interpret,
     )(owner2, is_upper.reshape(1, total), valid.reshape(1, total))
     return add, rem
+
+
+# ---------------------------------------------------------------------------
+# Pair-emission pass C (Algorithm 4 emission with bitmask active sets)
+# ---------------------------------------------------------------------------
+
+def _emission_pairs_kernel(owner_ref, is_upper_ref, is_sub_ref, valid_ref,
+                           sub0_ref, upd0_ref, out_i_ref, out_j_ref,
+                           sub_mask, upd_mask):
+    """One grid block = one segment T_p: sequential sweep with emission.
+
+    owner/is_upper/is_sub/valid: (1, BLOCK) int32 endpoint records (owner
+    pre-clipped to >= 0; valid=0 marks padding).
+    sub0/upd0: (1, Ws)/(1, Wu) uint32 — active sets *entering* the segment
+    (the exclusive monoid combine of the per-segment Add/Del bitmasks).
+    out_i/out_j: (1, CAP) int32 — this block's pairs, in emission order,
+    -1 padded.  CAP must be >= the block's pass-B emission total.
+    sub_mask/upd_mask: VMEM scratch, the live active-set bitmasks.
+    """
+    out_i_ref[...] = jnp.full(out_i_ref.shape, -1, jnp.int32)
+    out_j_ref[...] = jnp.full(out_j_ref.shape, -1, jnp.int32)
+    sub_mask[...] = sub0_ref[...]
+    upd_mask[...] = upd0_ref[...]
+    block = owner_ref.shape[1]
+    cap = out_i_ref.shape[1]
+    n_sub_words = sub_mask.shape[1]
+    n_upd_words = upd_mask.shape[1]
+
+    def step(t, ptr):
+        o = owner_ref[0, t]
+        up = is_upper_ref[0, t]
+        sb = is_sub_ref[0, t]
+        v = valid_ref[0, t]
+        emit_sub = (v != 0) & (up != 0) & (sb != 0)   # sub closes → emit upds
+        emit_upd = (v != 0) & (up != 0) & (sb == 0)   # upd closes → emit subs
+        pc_upd = jnp.sum(lax.population_count(upd_mask[...])).astype(jnp.int32)
+        pc_sub = jnp.sum(lax.population_count(sub_mask[...])).astype(jnp.int32)
+
+        def walk(mask_ref, num_words, write):
+            # Walk the counterpart bitmask; the d-th set bit lands at slot
+            # ptr + d (the in-word prefix popcount gives d without a carry).
+            def word_body(wi, lp):
+                word = mask_ref[0, wi]
+                def bit_body(b, _):
+                    bu = jnp.uint32(b)
+                    prefix = lax.population_count(
+                        word & ((jnp.uint32(1) << bu) - jnp.uint32(1)))
+                    dest = lp + prefix.astype(jnp.int32)
+                    @pl.when((((word >> bu) & 1) != 0) & (dest < cap))
+                    def _():
+                        write(dest, wi * 32 + b)
+                    return 0
+                lax.fori_loop(0, 32, bit_body, 0)
+                return lp + lax.population_count(word).astype(jnp.int32)
+            lax.fori_loop(0, num_words, word_body, ptr)
+
+        @pl.when(emit_sub)
+        def _():
+            def write(dest, cid):
+                out_i_ref[0, dest] = o
+                out_j_ref[0, dest] = cid
+            walk(upd_mask, n_upd_words, write)
+
+        @pl.when(emit_upd)
+        def _():
+            def write(dest, cid):
+                out_i_ref[0, dest] = cid
+                out_j_ref[0, dest] = o
+            walk(sub_mask, n_sub_words, write)
+
+        # active-set maintenance: lower opens, upper closes (own type only)
+        w = o // 32
+        bit = jnp.uint32(1) << (o % 32).astype(jnp.uint32)
+
+        @pl.when((v != 0) & (sb != 0))
+        def _():
+            word = sub_mask[0, w]
+            sub_mask[0, w] = jnp.where(up == 0, word | bit, word & ~bit)
+
+        @pl.when((v != 0) & (sb == 0))
+        def _():
+            word = upd_mask[0, w]
+            upd_mask[0, w] = jnp.where(up == 0, word | bit, word & ~bit)
+
+        return ptr + jnp.where(emit_sub, pc_upd, 0) \
+                   + jnp.where(emit_upd, pc_sub, 0)
+
+    lax.fori_loop(0, block, step, jnp.int32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "cap",
+                                             "interpret"))
+def sweep_emit_pairs_pallas(owner: jax.Array, is_upper: jax.Array,
+                            is_sub: jax.Array, valid: jax.Array,
+                            sub_active0: jax.Array, upd_active0: jax.Array,
+                            *, block_size: int, cap: int,
+                            interpret: bool = False):
+    """Pass C: per-block pair emission from per-block starting active sets.
+
+    ``owner``/``is_upper``/``is_sub``/``valid``: (total,) int32 sorted
+    endpoint records, total a multiple of ``block_size`` (owner clipped
+    to >= 0, padding marked valid=0).  ``sub_active0``/``upd_active0``:
+    (num_blocks, W) uint32 active-set bitmasks entering each block.
+    Returns (out_i, out_j): (num_blocks, cap) int32, each block's pairs at
+    slots [0, block_emission_total), -1 elsewhere.  Callers stitch blocks
+    together with the exclusive scan of pass B's per-block totals.
+    """
+    total = owner.shape[0]
+    if total % block_size:
+        raise ValueError(f"{total=} not a multiple of {block_size=}")
+    num_blocks = total // block_size
+    ws = sub_active0.shape[1]
+    wu = upd_active0.shape[1]
+    ep_spec = pl.BlockSpec((1, block_size), lambda i: (0, i))
+    out_i, out_j = pl.pallas_call(
+        _emission_pairs_kernel,
+        grid=(num_blocks,),
+        in_specs=[ep_spec, ep_spec, ep_spec, ep_spec,
+                  pl.BlockSpec((1, ws), lambda i: (i, 0)),
+                  pl.BlockSpec((1, wu), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, cap), lambda i: (i, 0)),
+                   pl.BlockSpec((1, cap), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((num_blocks, cap), jnp.int32),
+                   jax.ShapeDtypeStruct((num_blocks, cap), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, ws), jnp.uint32),
+                        pltpu.VMEM((1, wu), jnp.uint32)],
+        interpret=interpret,
+    )(owner.reshape(1, total), is_upper.reshape(1, total),
+      is_sub.reshape(1, total), valid.reshape(1, total),
+      sub_active0, upd_active0)
+    return out_i, out_j

@@ -1,0 +1,12 @@
+"""Optional-hypothesis shim.
+
+Property tests run under hypothesis when it is installed (the ``[test]``
+extra); on a bare environment they are skipped and the seeded example-based
+fallbacks in each test module keep the same invariants covered.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # bare environment — fallback tests only
+    HAVE_HYPOTHESIS = False
+    given = settings = st = None

@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
 from repro.core import (
     Extents,
     bf_count,
@@ -121,9 +121,7 @@ def test_row_index_lists():
                                   [[0, 2, -1], [-1, -1, -1], [0, 1, 2]])
 
 
-@given(st.integers(0, 2 ** 31 - 1), st.floats(0.01, 50.0))
-@settings(max_examples=20, deadline=None)
-def test_property_all_algorithms_agree(seed, alpha):
+def _check_all_algorithms_agree(seed, alpha):
     key = jax.random.PRNGKey(seed)
     subs, upds = make_uniform_workload(key, 60, 70, alpha=alpha, length=500.0)
     want = brute_force_count_numpy(subs, upds)
@@ -132,3 +130,16 @@ def test_property_all_algorithms_agree(seed, alpha):
     assert int(bf_count(subs, upds, block=32)) == want
     count, overflow = grid_count(subs, upds, num_cells=16, length=500.0, cap=256)
     assert int(overflow) == 0 and int(count) == want
+
+
+@pytest.mark.parametrize("seed,alpha",
+                         [(0, 0.01), (1, 1.0), (2, 50.0), (3, 7.5), (4, 0.5)])
+def test_all_algorithms_agree_examples(seed, alpha):
+    _check_all_algorithms_agree(seed, alpha)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2 ** 31 - 1), st.floats(0.01, 50.0))
+    @settings(max_examples=20, deadline=None)
+    def test_property_all_algorithms_agree(seed, alpha):
+        _check_all_algorithms_agree(seed, alpha)

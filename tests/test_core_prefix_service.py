@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import DDMService
 from repro.core import prefix as prefix_lib
@@ -32,15 +31,14 @@ def test_blelloch_scan():
                                   np.cumsum(np.arange(100)))
 
 
-@given(st.lists(st.tuples(st.booleans(), st.booleans()), min_size=1, max_size=64))
-@settings(max_examples=50, deadline=None)
-def test_delta_monoid_associativity(flags):
+@pytest.mark.parametrize("seed", range(50))
+def test_delta_monoid_associativity(seed):
     """The Algorithm-6 delta-set monoid must be associative for the tree scan
     to be legal — fuzz (A, D) elements and compare left/right grouping."""
     n = 8
-    rng = np.random.RandomState(42)
+    rng = np.random.RandomState(seed)
     elems = []
-    for _ in range(max(3, len(flags))):
+    for _ in range(3):
         a = rng.rand(n) < 0.4
         d = (rng.rand(n) < 0.4) & ~a  # invariant A ∩ D = ∅
         elems.append((jnp.asarray(a), jnp.asarray(d)))
@@ -48,7 +46,7 @@ def test_delta_monoid_associativity(flags):
     def comb(e1, e2):
         return prefix_lib.delta_combine_bool(e1, e2)
 
-    e1, e2, e3 = elems[0], elems[1], elems[2]
+    e1, e2, e3 = elems
     left = comb(comb(e1, e2), e3)
     right = comb(e1, comb(e2, e3))
     np.testing.assert_array_equal(np.asarray(left[0]), np.asarray(right[0]))

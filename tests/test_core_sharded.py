@@ -20,7 +20,7 @@ _SCRIPT = textwrap.dedent("""
                             rank_count_sharded, bf_count_sharded,
                             brute_force_count_numpy)
     from repro.core.prefix import shard_inclusive_cumsum
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     import numpy as np
 
@@ -46,6 +46,15 @@ _SCRIPT = textwrap.dedent("""
     assert got_sbm == want, (got_sbm, want)
     assert got_rank == want, (got_rank, want)
     assert got_bf == want, (got_bf, want)
+
+    # distributed pair enumeration == brute-force pair set
+    from repro.core import sbm_enumerate_sharded, brute_force_pairs_numpy
+    want_pairs = brute_force_pairs_numpy(subs, upds)
+    pairs, cnt = sbm_enumerate_sharded(subs, upds, mesh, "p",
+                                       max_pairs=len(want_pairs) + 32)
+    got_pairs = {(int(i), int(j)) for i, j in np.asarray(pairs) if i >= 0}
+    assert int(cnt) == len(want_pairs), (int(cnt), len(want_pairs))
+    assert got_pairs == want_pairs
     print("SHARDED_OK", want)
 """)
 

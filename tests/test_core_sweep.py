@@ -5,8 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
 from repro.core import (
     Extents,
     active_sets_at_segment_starts,
@@ -86,48 +86,71 @@ def test_empty_sets():
     assert int(sbm_count(subs, upds)) == 0
 
 
-# allow_subnormal=False: XLA CPU flushes float32 denormals to zero, numpy
-# does not — comparisons at ~1e-42 would differ between oracle and sweep.
-finite_floats = st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
-                          width=32, allow_subnormal=False)
-
-
-@st.composite
-def interval_sets(draw):
-    n = draw(st.integers(1, 40))
-    m = draw(st.integers(1, 40))
-
-    def mk(count):
-        lows, highs = [], []
-        for _ in range(count):
-            a = draw(finite_floats)
-            b = draw(finite_floats)
-            lows.append(min(a, b))
-            highs.append(max(a, b))
-        return lows, highs
-
-    ls, hs = mk(n)
-    lu, hu = mk(m)
-    return ls, hs, lu, hu
-
-
-@given(interval_sets())
-@settings(max_examples=60, deadline=None)
-def test_property_count_equals_brute_force(data):
-    ls, hs, lu, hu = data
+def _check_counts_and_pairs(ls, hs, lu, hu):
+    from repro.core import brute_force_pairs_numpy
     subs, upds = _mk(ls, hs, lu, hu)
     want = brute_force_count_numpy(subs, upds)
     assert int(sbm_count(subs, upds, num_segments=4)) == want
     assert sequential_sbm_count_numpy(subs, upds) == want
+    assert sequential_sbm_pairs_numpy(subs, upds) == \
+        brute_force_pairs_numpy(subs, upds)
 
 
-@given(interval_sets())
-@settings(max_examples=30, deadline=None)
-def test_property_sequential_pairs_match(data):
-    ls, hs, lu, hu = data
-    subs, upds = _mk(ls, hs, lu, hu)
-    from repro.core import brute_force_pairs_numpy
-    assert sequential_sbm_pairs_numpy(subs, upds) == brute_force_pairs_numpy(subs, upds)
+def _random_interval_sets(rng, max_size=40, integer=False):
+    """Adversarial random sets: integer grids produce heavy ties."""
+    n = rng.randint(1, max_size + 1)
+    m = rng.randint(1, max_size + 1)
+
+    def mk(count):
+        if integer:
+            lo = rng.randint(-10, 11, count).astype(float)
+            hi = lo + rng.randint(0, 6, count)
+        else:
+            a = rng.uniform(-1e4, 1e4, count)
+            b = rng.uniform(-1e4, 1e4, count)
+            lo, hi = np.minimum(a, b), np.maximum(a, b)
+        return lo.tolist(), hi.tolist()
+
+    return mk(n) + mk(m)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_random_examples_agree(seed):
+    """Example-based property sweep (runs with or without hypothesis)."""
+    rng = np.random.RandomState(seed)
+    for _ in range(4):
+        ls, hs, lu, hu = _random_interval_sets(rng, integer=(seed % 2 == 0))
+        _check_counts_and_pairs(ls, hs, lu, hu)
+
+
+if HAVE_HYPOTHESIS:
+    # allow_subnormal=False: XLA CPU flushes float32 denormals to zero, numpy
+    # does not — comparisons at ~1e-42 would differ between oracle and sweep.
+    finite_floats = st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+                              width=32, allow_subnormal=False)
+
+    @st.composite
+    def interval_sets(draw):
+        n = draw(st.integers(1, 40))
+        m = draw(st.integers(1, 40))
+
+        def mk(count):
+            lows, highs = [], []
+            for _ in range(count):
+                a = draw(finite_floats)
+                b = draw(finite_floats)
+                lows.append(min(a, b))
+                highs.append(max(a, b))
+            return lows, highs
+
+        ls, hs = mk(n)
+        lu, hu = mk(m)
+        return ls, hs, lu, hu
+
+    @given(interval_sets())
+    @settings(max_examples=60, deadline=None)
+    def test_property_count_and_pairs_equal_brute_force(data):
+        _check_counts_and_pairs(*data)
 
 
 def test_algorithm6_active_sets_match_sequential():

@@ -6,8 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
 from repro.configs import ShapeDef, get_config, reduce_config
 from repro.models import ModelConfig, LayerSpec
 from repro.models import attention as attn_lib
@@ -63,9 +63,7 @@ def test_blockwise_with_segments_and_softcap():
 # MoE sort-based dispatch
 # ---------------------------------------------------------------------------
 
-@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 16), st.integers(1, 4))
-@settings(max_examples=30, deadline=None)
-def test_dispatch_invariants(seed, e, cap_pow):
+def _check_dispatch_invariants(seed, e, cap_pow):
     cap = 2 ** cap_pow
     rng = np.random.RandomState(seed % 2 ** 31)
     r = rng.randint(1, 64)
@@ -86,6 +84,20 @@ def test_dispatch_invariants(seed, e, cap_pow):
     counts = np.bincount(np.asarray(ids), minlength=e)
     for ei in range(e):
         assert (bins[ei] >= 0).sum() == min(counts[ei], cap)
+
+
+@pytest.mark.parametrize("seed,e,cap_pow",
+                         [(0, 2, 1), (1, 16, 4), (2, 7, 2), (3, 3, 3),
+                          (4, 11, 1)])
+def test_dispatch_invariants_examples(seed, e, cap_pow):
+    _check_dispatch_invariants(seed, e, cap_pow)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(2, 16), st.integers(1, 4))
+    @settings(max_examples=30, deadline=None)
+    def test_dispatch_invariants(seed, e, cap_pow):
+        _check_dispatch_invariants(seed, e, cap_pow)
 
 
 def test_moe_layer_exactness_vs_dense_compute():
