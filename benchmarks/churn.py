@@ -1,0 +1,143 @@
+"""Churn workload — the dynamic DDM setting (Pan et al.; arXiv:1911.03456).
+
+A federation registers N regions once and then *moves* a fraction of them
+every step.  The stateless sweep pays O((n+m)·log(n+m) + K) per step no
+matter how small the change; the incremental engine
+(:mod:`repro.core.incremental`) pays O(b·log b + n + m + K_changed) for b
+moved regions.  This benchmark measures both:
+
+* ``churn_rebuild_single_move`` — one region moves, the match state is
+  rebuilt from scratch (cache dropped → stateless sweep enumeration);
+  this is also the rebuild reference for the fraction sweep — its cost is
+  independent of how many regions moved;
+* ``churn_delta_single_move`` — the same move served by ``flush()`` delta
+  rematching against the persistent index;
+* ``churn_delta_<dist>_f*`` — whole-step delta cost at move fractions f
+  per step, on the paper-§5 uniform and clustered workloads (compare
+  each against the rebuild reference to locate the crossover).
+
+Region sets follow the paper §5 (identical lengths l = αL/N, uniform or
+16-cluster placement on L = 1e6).  Run standalone with
+``PYTHONPATH=src python -m benchmarks.churn [--smoke]`` or through
+``python -m benchmarks.run --only churn``.  ``--smoke`` is the CI guard:
+tiny N, one rep, asserts delta == rebuild exactly.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.core import DDMService, make_clustered_workload, make_uniform_workload
+
+N_FULL = 100_000          # n = m = 1e5 (the acceptance-criterion scale)
+N_SMOKE = 400
+ALPHA = 1.0               # K ≈ N·α/2 keeps the python pair set tractable
+
+
+def _build_service(maker, n_each: int, alpha: float, seed: int) -> DDMService:
+    subs, upds = maker(jax.random.PRNGKey(seed), n_each, n_each, alpha=alpha)
+    svc = DDMService(dims=1, capacity=2 * n_each)
+    s_lo = np.asarray(subs.lo); s_hi = np.asarray(subs.hi)
+    u_lo = np.asarray(upds.lo); u_hi = np.asarray(upds.hi)
+    for i in range(n_each):
+        svc.register_subscription([s_lo[i]], [s_hi[i]])
+        svc.register_update([u_lo[i]], [u_hi[i]])
+    return svc
+
+
+def _random_move(svc: DDMService, rng, length=1.0e6, seg=10.0):
+    """Move one random live update region to a fresh uniform spot."""
+    ids = svc._upds.live_ids()
+    rid = int(ids[rng.randint(ids.size)])
+    lo = float(rng.uniform(0, length - seg))
+    svc.move_update(rid, [lo], [lo + seg])
+    return rid
+
+
+def single_move(rows: List[str], n_each: int, reps: int) -> None:
+    """One-region move: delta rematch vs full rebuild (same service state)."""
+    svc = _build_service(make_uniform_workload, n_each, ALPHA, seed=0)
+    svc.all_pairs()                       # warm cache + jit
+    rng = np.random.RandomState(1)
+
+    t_delta = 0.0
+    for _ in range(reps):
+        _random_move(svc, rng)
+        t0 = time.perf_counter()
+        svc.flush()                       # delta rematch, cache updated
+        t_delta += time.perf_counter() - t0
+    t_delta /= reps
+
+    t_rebuild = 0.0
+    for _ in range(reps):
+        _random_move(svc, rng)
+        svc.invalidate_cache()            # force the stateless rebuild path
+        t0 = time.perf_counter()
+        svc.all_pairs()
+        t_rebuild += time.perf_counter() - t0
+    t_rebuild /= reps
+
+    k = svc.match_count()
+    tag = f"n{n_each:_}".replace("_", "")
+    rows.append(f"churn_delta_single_move_{tag},{t_delta*1e6:.1f},K={k}")
+    rows.append(f"churn_rebuild_single_move_{tag},{t_rebuild*1e6:.1f},K={k}")
+    rows.append(f"churn_single_move_speedup_{tag},"
+                f"{t_rebuild/t_delta:.1f},delta_vs_rebuild_x")
+
+
+def move_fraction_sweep(rows: List[str], n_each: int, reps: int) -> None:
+    """Whole-step cost vs move fraction, uniform + clustered region sets."""
+    for tag, maker in (("uniform", make_uniform_workload),
+                       ("clustered", make_clustered_workload)):
+        svc = _build_service(maker, n_each, ALPHA, seed=2)
+        svc.all_pairs()
+        rng = np.random.RandomState(3)
+        for frac in (0.0001, 0.001, 0.01):
+            b = max(1, int(frac * 2 * n_each))
+            t = 0.0
+            for _ in range(reps):
+                for _ in range(b):
+                    _random_move(svc, rng)
+                t0 = time.perf_counter()
+                svc.flush()
+                t += time.perf_counter() - t0
+            f = str(frac).replace(".", "p")
+            rows.append(f"churn_delta_{tag}_f{f},{t/reps*1e6:.1f},b={b}")
+
+
+def smoke(rows: List[str]) -> None:
+    """CI smoke: tiny N, every entry point, delta == rebuild asserted."""
+    svc = _build_service(make_uniform_workload, N_SMOKE, 10.0, seed=0)
+    want = svc.all_pairs()
+    rng = np.random.RandomState(4)
+    for step in range(3):
+        for _ in range(5):
+            _random_move(svc, rng, seg=1000.0)
+        svc.flush()
+    got = svc.all_pairs()
+    svc.invalidate_cache()
+    assert svc.all_pairs() == got, "delta path drifted from rebuild"
+    rows.append(f"churn_smoke_n{N_SMOKE},0,pairs={len(got)}")
+    single_move(rows, N_SMOKE, reps=2)
+    move_fraction_sweep(rows, N_SMOKE, reps=1)
+
+
+def run(rows: List[str]) -> None:
+    single_move(rows, N_FULL, reps=3)
+    move_fraction_sweep(rows, N_FULL, reps=2)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-N CI guard (asserts delta == rebuild)")
+    args = ap.parse_args()
+    rows: List[str] = []
+    print("name,us_per_call,derived")
+    (smoke if args.smoke else run)(rows)
+    for r in rows:
+        print(r, flush=True)

@@ -139,6 +139,24 @@ def enumeration(rows: List[str]) -> None:
                         f"{dt_blocked/dt_sweep:.1f},sweep_vs_blocked_x")
 
 
+def smoke(rows: List[str]) -> None:
+    """CI smoke: tiny N through every engine + enumeration, agreement
+    asserted — guards the benchmark entry points against silent rot."""
+    n = 2_000
+    subs, upds = make_uniform_workload(jax.random.PRNGKey(0), n // 2, n // 2,
+                                       alpha=10.0)
+    k = int(sbm_count(subs, upds, num_segments=8))
+    assert int(rank_count(subs, upds)) == k
+    assert int(bf_count(subs, upds, block=256)) == k
+    assert sequential_sbm_count_numpy(subs, upds) == k
+    cap = round_up_pow2(k)
+    pairs, cnt = sbm_enumerate(subs, upds, max_pairs=cap, num_segments=8)
+    assert int(cnt) == k
+    _, cnt_b = enumerate_matches(subs, upds, max_pairs=cap, block=256)
+    assert int(cnt_b) == k
+    rows.append(f"matching_smoke_n{n},0,K={k}")
+
+
 def run(rows: List[str]) -> None:
     wct_vs_algorithm(rows)
     wct_vs_n(rows)
@@ -153,12 +171,14 @@ if __name__ == "__main__":
     ap.add_argument("--only", default="all",
                     choices=["all", "enumeration", "algorithm", "n", "alpha",
                              "scan"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-N CI guard (engine agreement asserted)")
     args = ap.parse_args()
     fns = {"all": run, "enumeration": enumeration,
            "algorithm": wct_vs_algorithm, "n": wct_vs_n,
            "alpha": wct_vs_alpha, "scan": scan_impl_sweep}
     rows: List[str] = []
     print("name,us_per_call,derived")
-    fns[args.only](rows)
+    (smoke if args.smoke else fns[args.only])(rows)
     for r in rows:
         print(r, flush=True)

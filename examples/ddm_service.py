@@ -64,6 +64,15 @@ def service_demo() -> None:
     print(f"after move: {before} -> {after} matched subscriptions")
     assert after >= before
 
+    # delta rematching (DESIGN.md §6): flush() applies the pending moves as
+    # one incremental-index batch and returns exactly the pairs the batch
+    # created/destroyed — the notification set, no world rebuild.
+    svc.all_pairs()                           # warm the cached match state
+    svc.move_update(u, [0, 0], [5, 5])        # shrinks back down
+    delta = svc.flush()
+    print(f"delta rematch: +{len(delta.added)} / -{len(delta.removed)} pairs")
+    assert len(svc.all_pairs()) == svc.match_count()
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()

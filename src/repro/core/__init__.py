@@ -10,6 +10,7 @@ Public surface:
   grid_count                               — grid-based matching (§3.2)
   sbm_enumerate, sbm_enumerate_sharded     — sweep pair enumeration (O(K))
   enumerate_matches, match_matrix, ...     — oracle/structure reporting
+  IncrementalIndex, BatchDelta             — persistent index + delta rematch
   DDMService                               — HLA-style service facade
 """
 from repro.core.intervals import (
@@ -25,6 +26,7 @@ from repro.core.sweep import (
     EndpointStream,
     encode_endpoints,
     sbm_count,
+    sbm_count_exact,
     sbm_count_sharded,
     sbm_active_profile,
     active_sets_at_segment_starts,
@@ -54,12 +56,14 @@ from repro.core.matrix import (
     block_mask_from_extents,
     document_extents,
 )
+from repro.core.incremental import BatchDelta, IncrementalIndex
 from repro.core.service import DDMService
 
 __all__ = [
     "Extents", "intersect_1d", "intersect_ddim", "make_uniform_workload",
     "make_clustered_workload", "brute_force_count_numpy", "brute_force_pairs_numpy",
-    "EndpointStream", "encode_endpoints", "sbm_count", "sbm_count_sharded",
+    "EndpointStream", "encode_endpoints", "sbm_count", "sbm_count_exact",
+    "sbm_count_sharded",
     "sbm_active_profile", "active_sets_at_segment_starts",
     "sequential_sbm_count_numpy", "sequential_sbm_pairs_numpy",
     "rank_count", "rank_count_sharded", "per_sub_match_counts",
@@ -68,5 +72,5 @@ __all__ = [
     "sbm_enumerate", "sbm_enumerate_sharded",
     "match_matrix", "match_matrix_ddim", "row_index_lists",
     "block_extents_for_sequence", "block_mask_from_extents", "document_extents",
-    "DDMService",
+    "BatchDelta", "IncrementalIndex", "DDMService",
 ]

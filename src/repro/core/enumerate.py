@@ -51,6 +51,22 @@ def _count_dtype():
     return jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32
 
 
+def _offset_cumsum(counts: jax.Array) -> jax.Array:
+    """Offset-table cumsum with the repo-wide K ≥ 2³¹ contract.
+
+    Under x64 the scan runs in exact int64.  Without x64 it *saturates* at
+    2³¹−1 (:func:`repro.core.prefix.cumsum_saturating_i32`) instead of
+    wrapping: the table stays monotonic, so slot→emitter binary search stays
+    correct for every slot < ``max_pairs`` (necessarily < 2³¹), and the
+    returned count pins at the 2³¹−1 sentinel rather than going negative.
+    Callers needing the true K beyond the sentinel use
+    :func:`repro.core.sweep.sbm_count_exact`.
+    """
+    if jax.config.read("jax_enable_x64"):
+        return jnp.cumsum(counts, dtype=jnp.int64)
+    return prefix_lib.cumsum_saturating_i32(counts)
+
+
 def _empty_result(max_pairs: int):
     return (jnp.full((max_pairs, 2), -1, jnp.int32),
             jnp.zeros((), _count_dtype()))
@@ -73,9 +89,9 @@ def _sbm_enumerate_jit(subs: Extents, upds: Extents, *, max_pairs: int,
 
     # Offset table: exclusive scan of per-emitter counts (emitters are the
     # n subs then the m upds; the scan is over n+m entries, not the stream).
-    # Without x64 the int32 wrap at K >= 2^31 is a repo-wide limit.
+    # Without x64 it saturates at 2^31-1 instead of wrapping (_offset_cumsum).
     counts = jnp.concatenate([a_cnt, b_cnt])
-    off = jnp.cumsum(counts, dtype=_count_dtype())
+    off = _offset_cumsum(counts)
     k_total = off[-1]
 
     # Slot-parallel emission: slot s belongs to the emitter whose offset
@@ -131,7 +147,9 @@ def sbm_enumerate_sharded(subs: Extents, upds: Extents, mesh, axis_name: str,
 
     Per-shard buffers hold ``max_pairs_per_shard`` (default ``max_pairs``)
     pairs; a shard emitting more drops the excess but the returned count is
-    still exact.
+    still exact.  Without x64, a global K ≥ 2³¹ pins the count at the
+    2³¹−1 sentinel and returns an all-(-1) buffer (the cross-shard stitch
+    offsets would wrap) — never silently wrong pairs.
     """
     from jax.sharding import PartitionSpec as P
     from repro.compat import shard_map
@@ -174,10 +192,29 @@ def sbm_enumerate_sharded(subs: Extents, upds: Extents, mesh, axis_name: str,
         o_c = jnp.clip(owner, 0)
         cnt = jnp.where(sel_s_up, a_cnt[jnp.minimum(o_c, n - 1)], 0)
         cnt = cnt + jnp.where(sel_u_up, b_cnt[jnp.minimum(o_c, m - 1)], 0)
-        lc = jnp.cumsum(cnt, dtype=cdtype)   # global K may exceed int32
+        # per-shard offsets: int64-exact under x64, saturating int32 without
+        # (the aggregate psum'd count is exact only below 2^31 in that case)
+        lc = _offset_cumsum(cnt)
         local_total = lc[-1]
         base = prefix_lib.shard_exclusive_offsets(local_total, axis_name)
-        k_total = lax.psum(local_total, axis_name)
+        if cdtype == jnp.int64:
+            k_total = lax.psum(local_total, axis_name)
+            overflow = jnp.zeros((), jnp.bool_)
+        else:
+            # psum of int32 local totals can wrap even when every shard is
+            # below the sentinel — combine 15-bit lanes (each psum provably
+            # fits int32 for any realistic shard count) and saturate, so
+            # the aggregate honors the same never-wrap contract as
+            # _offset_cumsum.  When the aggregate does overflow, the
+            # cross-shard stitch offsets (base/incl below) would wrap and
+            # mis-route slots to the wrong shard buffers, so the overflow
+            # flag blanks the pair buffer: callers get the 2^31-1 count
+            # sentinel and an all-(-1) buffer, never silently wrong pairs.
+            hi = lax.psum(local_total >> 15, axis_name)
+            lo15 = lax.psum(local_total & 0x7FFF, axis_name)
+            s = (hi << 15) + lo15
+            overflow = (hi >= 1 << 16) | (s < 0)
+            k_total = jnp.where(overflow, jnp.int32((1 << 31) - 1), s)
 
         slots = jnp.arange(cap, dtype=jnp.int32)
         epos = jnp.searchsorted(lc, slots, side="right").astype(jnp.int32)
@@ -194,21 +231,22 @@ def sbm_enumerate_sharded(subs: Extents, upds: Extents, mesh, axis_name: str,
         lvalid = slots < local_total
         buf = jnp.where(lvalid[:, None], jnp.stack([pi, pj], axis=-1), -1)
         return (buf, base.reshape(1).astype(cdtype),
-                local_total.reshape(1).astype(cdtype), k_total)
+                local_total.reshape(1).astype(cdtype), k_total, overflow)
 
     fn = shard_map(body, mesh=mesh,
                    in_specs=(P(axis_name), P(axis_name), P(axis_name),
                              P(axis_name), P(axis_name)),
-                   out_specs=(P(axis_name), P(axis_name), P(axis_name), P()))
-    buf, base, local_totals, k_total = fn(sub_lo, upd_lo, owner, is_upper,
-                                          is_sub)
+                   out_specs=(P(axis_name), P(axis_name), P(axis_name), P(),
+                              P()))
+    buf, base, local_totals, k_total, overflow = fn(sub_lo, upd_lo, owner,
+                                                    is_upper, is_sub)
     bufs = buf.reshape(num_shards, cap, 2)
     incl = base + local_totals                      # per-shard global ranges
     slots = jnp.arange(max_pairs, dtype=jnp.int32)
     p = jnp.minimum(jnp.searchsorted(incl, slots, side="right"),
                     num_shards - 1).astype(jnp.int32)
     r = slots - base[p]
-    valid = (slots < jnp.minimum(k_total, max_pairs)) & (r < cap)
+    valid = (slots < jnp.minimum(k_total, max_pairs)) & (r < cap) & ~overflow
     pairs = jnp.where(valid[:, None],
                       bufs[p, jnp.clip(r, 0, cap - 1)], -1)
     return pairs, k_total

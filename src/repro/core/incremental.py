@@ -1,0 +1,402 @@
+"""Incremental DDM engine — persistent endpoint index + delta rematching.
+
+The paper's sweep is a batch algorithm, but the DDM service it accelerates
+is a *churn* workload: federates continuously move, register and unregister
+regions (Pan et al.'s dynamic DDM; the journal follow-up arXiv:1911.03456
+makes the dynamic-interval-management setting explicit).  Rebuilding the
+world for one moved region costs the full O((n+m)·log(n+m)) sort; this
+module keeps the sorted :class:`~repro.core.sweep.EndpointStream` *live*
+across queries and pays per batch of ``b`` changed regions only
+
+* O(b·log b) to sort the 2·b delta endpoints,
+* O(n+m) single vectorized passes to splice them into the index, and
+* one vectorized O(m_counterpart) closed-interval rematch per changed
+  region (output O(K_changed)) to re-derive exactly the pairs the batch
+  gained and lost — O(b·log b + n + m + b·m) per batch in total,
+
+instead of a world rebuild (no re-sort of the unchanged 2·(n+m)−2·b
+endpoints, no O(K) re-enumeration of unchanged pairs).  The win is for
+small batches — the churn hot path; once b reaches a fraction of a
+percent of the world (~0.2 % measured, EXPERIMENTS.md §Churn) the
+O(b·m) rematch crosses the rebuild cost and the service's
+cache-drop fallback (``DDMService.invalidate_cache()`` → one stateless
+sweep rebuild) is the better strategy (measured crossover in
+EXPERIMENTS.md §Churn).
+
+Rematching reuses the rank-table construction of
+:func:`repro.core.sweep.rank_tables_from_cumsums` *restricted to changed
+extents* (DESIGN.md §6): in the sorted stream every endpoint has a unique
+position, so each region's match set splits into
+
+* **class A** (counterpart opens later) — a *contiguous rank range* over
+  the counterpart's lower endpoints, gathered in O(K_A); and
+* **class B** (counterpart opens earlier) — the counterparts whose own
+  class-A range *stabs* this region's lower-endpoint rank, one vectorized
+  interval test over the counterpart table.
+
+The index is host-resident numpy (the service control plane): churn batches
+are latency-bound pointer surgery, not throughput-bound math, and keeping
+them off-device avoids a jit dispatch + transfer per federate move.  The
+stateless device sweep (:func:`repro.core.enumerate.sbm_enumerate`) remains
+the rebuild path and the oracle every batch is property-tested against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, NamedTuple, Optional, Set, Tuple
+
+import numpy as np
+
+SUB = "sub"
+UPD = "upd"
+_SIDES = (SUB, UPD)
+
+
+class BatchDelta(NamedTuple):
+    """Exact pair-set change of one :meth:`IncrementalIndex.apply_batch`.
+
+    ``added``/``removed`` are disjoint sets of ``(sub_rid, upd_rid)`` pairs:
+    applying ``pairs -= removed; pairs |= added`` to the pre-batch match set
+    yields exactly the post-batch match set (asserted end-to-end in
+    ``tests/test_core_incremental.py`` against a from-scratch sweep).
+    """
+
+    added: Set[Tuple[int, int]]
+    removed: Set[Tuple[int, int]]
+
+
+def _as_bounds(dims: int, lo, hi) -> Tuple[np.ndarray, np.ndarray]:
+    lo = np.atleast_1d(np.asarray(lo, np.float32))
+    hi = np.atleast_1d(np.asarray(hi, np.float32))
+    if lo.shape != (dims,) or hi.shape != (dims,):
+        raise ValueError(
+            f"bounds must have length {dims}: got lo {lo.shape}, hi {hi.shape}")
+    if not np.all(lo <= hi):
+        raise ValueError(f"malformed region: lo {lo} > hi {hi} "
+                         "(the sweep precondition is lo <= hi)")
+    return lo, hi
+
+
+def _ragged_gather(starts: np.ndarray, counts: np.ndarray,
+                   table: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Concatenate ``table[starts[i] : starts[i]+counts[i]]`` for all i.
+
+    Returns (gathered values, repeat-index of the source row per value) —
+    the vectorized form of the per-extent contiguous-range emission.
+    """
+    counts = counts.astype(np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, table.dtype), np.zeros(0, np.int64)
+    ends = np.cumsum(counts)
+    within = np.arange(total, dtype=np.int64) - np.repeat(ends - counts, counts)
+    src = np.repeat(np.arange(starts.shape[0], dtype=np.int64), counts)
+    return table[np.repeat(starts.astype(np.int64), counts) + within], src
+
+
+@dataclasses.dataclass
+class _Prep:
+    """Position-space rank tables of one frozen index state.
+
+    The same quantities as :func:`repro.core.sweep.rank_tables_from_cumsums`
+    (a/b per-extent rank ranges + rank→id maps), built from the persistent
+    sorted stream with two numpy cumsums — O(n+m) per batch, cached until
+    the next mutation.
+    """
+
+    subs_by_lo: np.ndarray   # sub-lower rank → sub rid
+    upds_by_lo: np.ndarray   # upd-lower rank → upd rid
+    a_start: np.ndarray      # per sub rid: first upd-lower rank after its lo
+    a_end: np.ndarray        # per sub rid: first upd-lower rank after its hi
+    b_start: np.ndarray      # per upd rid: symmetric over sub-lower ranks
+    b_end: np.ndarray
+    live_s: np.ndarray       # live rid arrays (emission sources)
+    live_u: np.ndarray
+
+
+class IncrementalIndex:
+    """Persistent sorted endpoint index over live DDM regions.
+
+    Maintains the dim-0 endpoint stream of :func:`encode_endpoints` sorted
+    across arbitrary interleavings of region adds, moves and removes, by
+    sorting only each batch's 2·b delta endpoints and splicing them in with
+    single vectorized passes.  :meth:`apply_batch` additionally returns the
+    exact :class:`BatchDelta` of match pairs the batch created/destroyed;
+    :meth:`all_pairs` enumerates the full current match set from the index
+    without re-sorting.  d > 1 uses the dim-0 stream for candidates and
+    filters the remaining projections per pair (paper §3).
+    """
+
+    def __init__(self, dims: int = 1, capacity: int = 64):
+        if dims < 1:
+            raise ValueError(f"dims must be >= 1, got {dims}")
+        self.dims = dims
+        cap = max(int(capacity), 1)
+        self._lo = {s: np.full((dims, cap), np.inf, np.float32) for s in _SIDES}
+        self._hi = {s: np.full((dims, cap), -np.inf, np.float32) for s in _SIDES}
+        self._live = {s: np.zeros(cap, bool) for s in _SIDES}
+        # the persistent sorted stream (values ascending, lowers before
+        # uppers at equal values — the closed-interval tie-break)
+        self._values = np.zeros(0, np.float32)
+        self._is_upper = np.zeros(0, bool)
+        self._is_sub = np.zeros(0, bool)
+        self._owner = np.zeros(0, np.int32)
+        self._prep: _Prep | None = None
+
+    # -- introspection -----------------------------------------------------
+    def n_live(self, side: str) -> int:
+        return int(self._live[side].sum())
+
+    def live_ids(self, side: str) -> np.ndarray:
+        return np.nonzero(self._live[side])[0]
+
+    def extent_of(self, side: str, rid: int) -> Tuple[np.ndarray, np.ndarray]:
+        if not self._live[side][rid]:
+            raise KeyError(f"{side} region {rid} not in index")
+        return self._lo[side][:, rid].copy(), self._hi[side][:, rid].copy()
+
+    def stream(self):
+        """(values, is_upper, is_sub, owner) views of the sorted stream."""
+        return self._values, self._is_upper, self._is_sub, self._owner
+
+    # -- capacity ----------------------------------------------------------
+    def _ensure_capacity(self, side: str, rid: int) -> None:
+        cap = self._live[side].shape[0]
+        if rid < cap:
+            return
+        new = max(cap * 2, rid + 1)
+        for store, fill in ((self._lo, np.inf), (self._hi, -np.inf)):
+            grown = np.full((self.dims, new), fill, np.float32)
+            grown[:, :cap] = store[side]
+            store[side] = grown
+        live = np.zeros(new, bool)
+        live[:cap] = self._live[side]
+        self._live[side] = live
+
+    # -- the batch entry point --------------------------------------------
+    def apply_batch(self, *, adds: Iterable = (), moves: Iterable = (),
+                    removes: Iterable = (), want_delta: bool = True
+                    ) -> BatchDelta:
+        """Apply one churn batch; return the exact match-set delta.
+
+        ``adds``/``moves``: iterables of ``(side, rid, lo, hi)``;
+        ``removes``: iterables of ``(side, rid)``; ``side`` is ``"sub"`` or
+        ``"upd"``, bounds are scalars (d = 1) or length-d sequences with
+        ``lo <= hi`` (ValueError otherwise).  A rid may appear in at most
+        one of the three lists per side (compose upstream — the service's
+        pending queue does).  With ``want_delta=False`` only the index is
+        maintained (O(b·log b + n + m)) and the returned delta is empty —
+        for callers without a live match cache.
+        """
+        adds = [(s, int(r), *_as_bounds(self.dims, lo, hi))
+                for s, r, lo, hi in adds]
+        moves = [(s, int(r), *_as_bounds(self.dims, lo, hi))
+                 for s, r, lo, hi in moves]
+        removes = [(s, int(r)) for s, r in removes]
+
+        seen: Set[Tuple[str, int]] = set()
+        for side, rid in ([(s, r) for s, r, _, _ in adds + moves] + removes):
+            if side not in _SIDES:
+                raise ValueError(f"unknown side {side!r}")
+            if rid < 0:
+                raise ValueError(
+                    f"region ids must be >= 0, got {side} rid {rid} "
+                    "(negative ids would alias table slots)")
+            if (side, rid) in seen:
+                raise ValueError(
+                    f"{side} region {rid} appears twice in one batch "
+                    "(compose adds/moves/removes upstream)")
+            seen.add((side, rid))
+        for side, rid, _, _ in adds:
+            if rid < self._live[side].shape[0] and self._live[side][rid]:
+                raise ValueError(f"{side} region {rid} already in index")
+        for side, rid in [(s, r) for s, r, _, _ in moves] + removes:
+            if not (rid < self._live[side].shape[0] and self._live[side][rid]):
+                raise KeyError(f"{side} region {rid} not in index")
+        if not seen:
+            return BatchDelta(set(), set())
+
+        # pairs the changed regions participate in *before* the batch
+        old_pairs: Set[Tuple[int, int]] = set()
+        changed_old = [(s, r) for s, r, _, _ in moves] + removes
+        if want_delta:
+            lv = {s: self.live_ids(s) for s in _SIDES}   # once per phase
+            for side, rid in changed_old:
+                old_pairs |= self._matches_of(side, rid, lv)
+
+        # splice the delta into the persistent stream + dense stores
+        self._delete_records([(s, r) for s, r, _, _ in moves] + removes)
+        for side, rid in removes:
+            self._live[side][rid] = False
+            self._lo[side][:, rid] = np.inf
+            self._hi[side][:, rid] = -np.inf
+        inserts = moves + adds
+        for side, rid, lo, hi in inserts:
+            self._ensure_capacity(side, rid)
+            self._lo[side][:, rid] = lo
+            self._hi[side][:, rid] = hi
+            self._live[side][rid] = True
+        self._insert_records(inserts)
+        self._prep = None
+
+        # pairs the changed regions participate in *after* the batch
+        new_pairs: Set[Tuple[int, int]] = set()
+        if want_delta:
+            lv = {s: self.live_ids(s) for s in _SIDES}
+            for side, rid, _, _ in inserts:
+                new_pairs |= self._matches_of(side, rid, lv)
+        return BatchDelta(added=new_pairs - old_pairs,
+                          removed=old_pairs - new_pairs)
+
+    # -- stream surgery ----------------------------------------------------
+    def _delete_records(self, keys: List[Tuple[str, int]]) -> None:
+        if not keys:
+            return
+        # one common size — the owner column is gathered through both masks
+        size = max(self._live[s].shape[0] for s in _SIDES)
+        drop = {s: np.zeros(size, bool) for s in _SIDES}
+        for side, rid in keys:
+            drop[side][rid] = True
+        gone = np.where(self._is_sub, drop[SUB][self._owner],
+                        drop[UPD][self._owner])
+        keep = ~gone
+        self._values = self._values[keep]
+        self._is_upper = self._is_upper[keep]
+        self._is_sub = self._is_sub[keep]
+        self._owner = self._owner[keep]
+
+    def _insert_records(self, entries: List[Tuple[str, int, np.ndarray,
+                                                  np.ndarray]]) -> None:
+        if not entries:
+            return
+        b = len(entries)
+        vals = np.empty(2 * b, np.float32)
+        up = np.zeros(2 * b, bool)
+        sub = np.empty(2 * b, bool)
+        own = np.empty(2 * b, np.int32)
+        for i, (side, rid, lo, hi) in enumerate(entries):
+            vals[i], vals[b + i] = lo[0], hi[0]        # dim-0 endpoints
+            up[b + i] = True
+            sub[i] = sub[b + i] = side == SUB
+            own[i] = own[b + i] = rid
+        order = np.lexsort((up, vals))                  # O(b·log b) — delta only
+        vals, up, sub, own = vals[order], up[order], sub[order], own[order]
+        # Splice position per delta record: a *lower* goes before every
+        # stream record of equal value (side='left'), an *upper* after all
+        # of them (side='right') — preserving the lowers-before-uppers
+        # closed-interval tie-break without comparing composite keys.
+        pos = np.where(up, np.searchsorted(self._values, vals, side="right"),
+                       np.searchsorted(self._values, vals, side="left"))
+        dest = pos + np.arange(2 * b)        # pos is nondecreasing in order
+        total = self._values.shape[0] + 2 * b
+        old = np.ones(total, bool)
+        old[dest] = False
+        for name, delta in (("_values", vals), ("_is_upper", up),
+                            ("_is_sub", sub), ("_owner", own)):
+            merged = np.empty(total, delta.dtype)
+            merged[dest] = delta
+            merged[old] = getattr(self, name)
+            setattr(self, name, merged)
+
+    # -- rank tables + per-region match sets -------------------------------
+    def _prep_tables(self) -> _Prep:
+        if self._prep is not None:
+            return self._prep
+        sel_lo = ~self._is_upper
+        sel_s_lo = self._is_sub & sel_lo
+        sel_u_lo = ~self._is_sub & sel_lo
+        c_sub_lo = np.cumsum(sel_s_lo)       # host int64 — no wrap to fix
+        c_upd_lo = np.cumsum(sel_u_lo)
+        cap_s = self._live[SUB].shape[0]
+        cap_u = self._live[UPD].shape[0]
+        a_start = np.zeros(cap_s, np.int64)
+        a_end = np.zeros(cap_s, np.int64)
+        b_start = np.zeros(cap_u, np.int64)
+        b_end = np.zeros(cap_u, np.int64)
+        sel_s_up = self._is_sub & self._is_upper
+        sel_u_up = ~self._is_sub & self._is_upper
+        # inclusive cumsum at a foreign-type position counts strictly-before
+        # lowers — exactly rank_tables_from_cumsums' scatter, done once per
+        # batch on the host stream instead of per jit call on device
+        a_start[self._owner[sel_s_lo]] = c_upd_lo[sel_s_lo]
+        a_end[self._owner[sel_s_up]] = c_upd_lo[sel_s_up]
+        b_start[self._owner[sel_u_lo]] = c_sub_lo[sel_u_lo]
+        b_end[self._owner[sel_u_up]] = c_sub_lo[sel_u_up]
+        self._prep = _Prep(
+            subs_by_lo=self._owner[sel_s_lo], upds_by_lo=self._owner[sel_u_lo],
+            a_start=a_start, a_end=a_end, b_start=b_start, b_end=b_end,
+            live_s=self.live_ids(SUB), live_u=self.live_ids(UPD))
+        return self._prep
+
+    def _filter_other_dims(self, side: str, rid: int,
+                           cand: np.ndarray) -> np.ndarray:
+        """Keep dim-0 candidates whose remaining projections also overlap."""
+        if self.dims == 1 or cand.size == 0:
+            return cand
+        other = UPD if side == SUB else SUB
+        q_lo, q_hi = self._lo[side][:, rid], self._hi[side][:, rid]
+        c_lo, c_hi = self._lo[other][:, cand], self._hi[other][:, cand]
+        keep = np.ones(cand.size, bool)
+        for d in range(1, self.dims):
+            keep &= (q_lo[d] <= c_hi[d]) & (c_lo[d] <= q_hi[d])
+        return cand[keep]
+
+    def _matches_of(self, side: str, rid: int,
+                    lv_cache: Optional[dict] = None) -> Set[Tuple[int, int]]:
+        """One region's match set — the rank-table query degenerated.
+
+        For a *single* extent the rank-table emission restricted to it is
+        the union of its class-A range (counterparts opening inside its
+        position interval) and the class-B stab (counterparts whose range
+        contains its lower rank) — and that union is exactly the
+        closed-interval overlap set, a pure value comparison.  So the
+        per-region query needs no position tables at all: one vectorized
+        ``lo <= q_hi ∧ hi >= q_lo`` over live counterparts, O(m) with a
+        tiny constant and — unlike the O(n+m) table rebuild — independent
+        of this side's size.  The full table form lives on in
+        :meth:`all_pairs`, where the position-space partition is what
+        makes whole-world emission O(K).  ``lv_cache`` lets apply_batch
+        hoist the per-side live-id scans to once per phase."""
+        other = UPD if side == SUB else SUB
+        lv = lv_cache[other] if lv_cache is not None else self.live_ids(other)
+        if lv.size == 0:
+            return set()
+        q_lo, q_hi = self._lo[side][0, rid], self._hi[side][0, rid]
+        hit = (self._lo[other][0, lv] <= q_hi) & (self._hi[other][0, lv] >= q_lo)
+        cand = self._filter_other_dims(side, rid, lv[hit])
+        if side == SUB:
+            return {(rid, int(j)) for j in cand}
+        return {(int(i), rid) for i in cand}
+
+    # -- full enumeration from the index (no re-sort) ----------------------
+    def all_pairs(self) -> Set[Tuple[int, int]]:
+        """Every matching ``(sub_rid, upd_rid)`` — O(n + m + K) host pass.
+
+        Class-A ranges of all live subs plus class-A ranges of all live
+        upds (each pair lands in exactly one) — the full rank-table
+        emission, reading the persistent stream instead of re-sorting.
+        Used as the index's own full-query path and cross-checked against
+        the stateless device sweep in the tests.
+        """
+        prep = self._prep_tables()
+        out: Set[Tuple[int, int]] = set()
+        ls, lu = prep.live_s, prep.live_u
+        if ls.size == 0 or lu.size == 0:
+            return out
+        jj, src = _ragged_gather(prep.a_start[ls],
+                                 prep.a_end[ls] - prep.a_start[ls],
+                                 prep.upds_by_lo)
+        ii = ls[src]
+        i2, src2 = _ragged_gather(prep.b_start[lu],
+                                  prep.b_end[lu] - prep.b_start[lu],
+                                  prep.subs_by_lo)
+        j2 = lu[src2]
+        ii = np.concatenate([ii, i2])
+        jj = np.concatenate([jj, j2])
+        if self.dims > 1 and ii.size:
+            keep = np.ones(ii.size, bool)
+            for d in range(1, self.dims):
+                keep &= ((self._lo[SUB][d, ii] <= self._hi[UPD][d, jj]) &
+                         (self._lo[UPD][d, jj] <= self._hi[SUB][d, ii]))
+            ii, jj = ii[keep], jj[keep]
+        return set(zip(ii.tolist(), jj.tolist()))

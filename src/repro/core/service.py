@@ -2,9 +2,20 @@
 
 Stateful register/modify/unregister of subscription and update regions,
 matching, and event routing — the service the paper's algorithm exists to
-accelerate.  Pair reporting dispatches to the *sweep* enumeration engine
-(:func:`repro.core.enumerate.sbm_enumerate`), so a full-match query is
-output-sensitive O((n+m)·log(n+m) + K) and never materializes the n×m match
+accelerate.  Since the service is a *churn* workload (federates move far
+more often than the world rebuilds), region mutations are buffered and
+applied as one batch to a persistent
+:class:`repro.core.incremental.IncrementalIndex`: the sorted endpoint
+stream survives across queries, each batch of ``b`` changes sorts only its
+own 2·b delta endpoints, and :meth:`flush` reports exactly the match pairs
+the batch created and destroyed (delta rematching — the HLA notification
+set).  ``all_pairs``/``match_count`` read a cached match state that the
+per-batch deltas keep current.
+
+The stateless sweep (:func:`repro.core.enumerate.sbm_enumerate`) remains
+the rebuild path — it (re)creates the cache on first query — and the oracle
+the incremental path is property-tested against.  Full-match queries are
+output-sensitive O((n+m)·log(n+m) + K) and never materialize the n×m match
 matrix; single-region queries are one O(n·d) comparison row.  The blocked
 all-pairs path (``repro.core.matrix`` / ``repro.core.enumerate
 .enumerate_matches``) remains the cross-check oracle in the test suite.
@@ -15,13 +26,15 @@ lifting runs in jitted JAX.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import enumerate as enumerate_lib
+from repro.core import incremental as incr_lib
 from repro.core import sweep as sweep_lib
+from repro.core.incremental import SUB, UPD, BatchDelta, IncrementalIndex
 from repro.core.intervals import Extents
 
 
@@ -43,7 +56,20 @@ class _RegionTable:
             free=list(range(capacity - 1, -1, -1)),
         )
 
+    def _validated(self, lo: Sequence[float], hi: Sequence[float]):
+        """The service-boundary region check (the sweep precondition).
+
+        Accepting ``lo > hi`` or wrong-length bounds here used to silently
+        violate the ``compact`` contract ("lo <= hi") and return wrong
+        counts; now both raise ``ValueError`` before any state changes.
+        NaNs fail the ``lo <= hi`` comparison and are rejected too.
+        Delegates to the incremental engine's :func:`_as_bounds` so the
+        two layers enforce one contract.
+        """
+        return incr_lib._as_bounds(self.lo.shape[0], lo, hi)
+
     def insert(self, lo: Sequence[float], hi: Sequence[float]) -> int:
+        lo, hi = self._validated(lo, hi)
         if not self.free:
             raise RuntimeError("region table full — grow capacity")
         rid = self.free.pop()
@@ -61,6 +87,7 @@ class _RegionTable:
         self.free.append(rid)
 
     def move(self, rid: int, lo: Sequence[float], hi: Sequence[float]) -> None:
+        lo, hi = self._validated(lo, hi)
         if not self.live[rid]:
             raise KeyError(f"region {rid} not registered")
         self.lo[:, rid] = lo
@@ -89,41 +116,143 @@ class DDMService:
     >>> u = svc.register_update([5, 5], [20, 20])
     >>> svc.matches_for_update(u)
     [s]
+
+    Mutations are buffered per region and applied as one incremental-index
+    batch at the next full-match query (or an explicit :meth:`flush`, which
+    also returns the exact pair delta).  Single-region queries
+    (``matches_for_update`` etc.) read the region tables directly and are
+    always current.
     """
 
     def __init__(self, dims: int = 1, capacity: int = 4096):
         self.dims = dims
         self._subs = _RegionTable.create(dims, capacity)
         self._upds = _RegionTable.create(dims, capacity)
+        self._index = IncrementalIndex(dims=dims, capacity=capacity)
+        # pending[(side, rid)] ∈ {"add", "move", "remove"} — composed so a
+        # rid reaches the index at most once per batch
+        self._pending: Dict[Tuple[str, int], str] = {}
+        self._match_cache: Optional[Set[Tuple[int, int]]] = None
+
+    def _table(self, side: str) -> _RegionTable:
+        return self._subs if side == SUB else self._upds
+
+    def _queue(self, side: str, rid: int, op: str) -> None:
+        """Compose a new mutation onto the pending batch entry for rid."""
+        key = (side, rid)
+        prev = self._pending.get(key)
+        if prev is None:
+            self._pending[key] = op
+        elif prev == "add":
+            if op == "remove":
+                del self._pending[key]       # add then remove: net no-op
+            # add then move: still an add (with the latest bounds)
+        elif prev == "move":
+            self._pending[key] = "move" if op == "move" else "remove"
+        else:  # prev == "remove" — the slot was freed and re-inserted
+            assert op == "add", "table guarantees remove before re-insert"
+            self._pending[key] = "move"      # net effect: extent replaced
 
     # -- registration -----------------------------------------------------
     def register_subscription(self, lo, hi) -> int:
-        return self._subs.insert(np.atleast_1d(lo), np.atleast_1d(hi))
+        rid = self._subs.insert(lo, hi)
+        self._queue(SUB, rid, "add")
+        return rid
 
     def register_update(self, lo, hi) -> int:
-        return self._upds.insert(np.atleast_1d(lo), np.atleast_1d(hi))
+        rid = self._upds.insert(lo, hi)
+        self._queue(UPD, rid, "add")
+        return rid
 
     def unregister_subscription(self, rid: int) -> None:
         self._subs.remove(rid)   # dead slots are inert sentinels
+        self._queue(SUB, rid, "remove")
 
     def unregister_update(self, rid: int) -> None:
         self._upds.remove(rid)
+        self._queue(UPD, rid, "remove")
 
-    # -- dynamic DDM (Pan et al. [20]): moved regions just overwrite their
-    # slot; queries are stateless over the sweep so no rematch bookkeeping.
+    # -- dynamic DDM (Pan et al. [20]): a moved region overwrites its slot
+    # and joins the pending batch; the next flush rematches only the delta.
     def move_subscription(self, rid: int, lo, hi) -> None:
-        self._subs.move(rid, np.atleast_1d(lo), np.atleast_1d(hi))
+        self._subs.move(rid, lo, hi)
+        self._queue(SUB, rid, "move")
 
     def move_update(self, rid: int, lo, hi) -> None:
-        self._upds.move(rid, np.atleast_1d(lo), np.atleast_1d(hi))
+        self._upds.move(rid, lo, hi)
+        self._queue(UPD, rid, "move")
+
+    # -- the incremental engine -------------------------------------------
+    def flush(self) -> BatchDelta:
+        """Apply pending mutations as ONE index batch; return the delta.
+
+        The returned :class:`BatchDelta` holds exactly the (sub rid, upd
+        rid) pairs the batch created (``added``) and destroyed
+        (``removed``) — the DDM notification set a federation needs after a
+        round of moves — at O(b·log b + n + m) index maintenance plus one
+        vectorized O(m) rematch per changed region (output O(K_changed)).
+        That beats the world rebuild for small batches (the churn hot
+        path).  For bulk batches (b beyond ~0.2% of the world on this
+        container — see EXPERIMENTS.md §Churn) call
+        :meth:`invalidate_cache` first: with
+        no cached match state a plain query skips delta computation and
+        rebuilds once via the stateless sweep.
+        """
+        return self._flush(want_delta=True)
+
+    def invalidate_cache(self) -> None:
+        """Drop the cached match state — the bulk-batch fallback.
+
+        After this, pending/future mutations are applied as index-only
+        maintenance (no per-region delta rematch) and the next
+        ``all_pairs`` rebuilds the cache once with the stateless sweep —
+        cheaper than delta rematching when a large fraction of the world
+        changed.
+        """
+        self._match_cache = None
+
+    def _flush(self, want_delta: bool) -> BatchDelta:
+        if not self._pending:
+            return BatchDelta(set(), set())
+        adds: List[Tuple[str, int, np.ndarray, np.ndarray]] = []
+        moves: List[Tuple[str, int, np.ndarray, np.ndarray]] = []
+        removes: List[Tuple[str, int]] = []
+        for (side, rid), op in self._pending.items():
+            if op == "remove":
+                removes.append((side, rid))
+            else:
+                t = self._table(side)
+                entry = (side, rid, t.lo[:, rid].copy(), t.hi[:, rid].copy())
+                (adds if op == "add" else moves).append(entry)
+        self._pending.clear()
+        delta = self._index.apply_batch(
+            adds=adds, moves=moves, removes=removes,
+            want_delta=want_delta or self._match_cache is not None)
+        if self._match_cache is not None:
+            self._match_cache -= delta.removed
+            self._match_cache |= delta.added
+        return delta
 
     # -- matching ----------------------------------------------------------
+    def _rebuild_pairs(self) -> Set[Tuple[int, int]]:
+        """The stateless full sweep — rebuild path and incremental oracle."""
+        sl = self._subs.live_ids()
+        ul = self._upds.live_ids()
+        if sl.size == 0 or ul.size == 0:
+            return set()
+        ii, jj, _ = self._sweep_pairs(self._subs.compact(sl),
+                                      self._upds.compact(ul))
+        return set(zip(sl[ii].tolist(), ul[jj].tolist()))
+
     def match_count(self) -> int:
-        """K — the parallel SBM counting sweep over live regions.
+        """K — cached match state when warm, else the SBM counting sweep.
 
         d > 1 uses the dim-0 sweep with pair-level filtering on the other
         projections (paper §3), via the same path as :meth:`all_pairs`.
         """
+        self._flush(want_delta=False)
+        if self._match_cache is not None:
+            return len(self._match_cache)
         sl = self._subs.live_ids()
         ul = self._upds.live_ids()
         if sl.size == 0 or ul.size == 0:
@@ -154,14 +283,19 @@ class DDMService:
         return arr[:, 0], arr[:, 1], int(count)
 
     def all_pairs(self) -> Set[Tuple[int, int]]:
-        """Every matching (subscription rid, update rid) — sweep enumeration."""
-        sl = self._subs.live_ids()
-        ul = self._upds.live_ids()
-        if sl.size == 0 or ul.size == 0:
-            return set()
-        ii, jj, _ = self._sweep_pairs(self._subs.compact(sl),
-                                      self._upds.compact(ul))
-        return set(zip(sl[ii].tolist(), ul[jj].tolist()))
+        """Every matching (subscription rid, update rid).
+
+        Served from the delta-maintained cache once warm; the first query
+        (or any query after the cache is dropped) rebuilds it with the
+        stateless sweep enumeration.  Returns a fresh copy (O(K) — the
+        live cache must not alias out); latency-sensitive churn loops
+        should consume :meth:`flush`'s delta and :meth:`match_count`
+        instead of re-reading the full set each step.
+        """
+        self._flush(want_delta=False)
+        if self._match_cache is None:
+            self._match_cache = self._rebuild_pairs()
+        return set(self._match_cache)
 
     def _row_matches(self, table: _RegionTable, lo: np.ndarray,
                      hi: np.ndarray) -> List[int]:

@@ -99,6 +99,9 @@ def _pad_stream(ep: EndpointStream, multiple: int) -> EndpointStream:
     pad = (-total) % multiple
     if pad == 0:
         return ep
+    # A padded record is an update-*lower* endpoint at +inf: it increments
+    # active_upd after every real endpoint but is never emitted against
+    # (emission only happens at upper endpoints, all of which precede it).
     inf = jnp.full((pad,), jnp.inf, ep.values.dtype)
     return EndpointStream(
         jnp.concatenate([ep.values, inf]),
@@ -106,9 +109,6 @@ def _pad_stream(ep: EndpointStream, multiple: int) -> EndpointStream:
         jnp.concatenate([ep.is_sub, jnp.zeros((pad,), jnp.bool_)]),
         jnp.concatenate([ep.owner, jnp.full((pad,), -1, jnp.int32)]),
     )
-    # A padded record is an update-*lower* endpoint at +inf: it increments
-    # active_upd after every real endpoint but is never emitted against
-    # (emission only happens at upper endpoints, all of which precede it).
 
 
 def resolve_cumsum(scan_impl: str, num_segments: int):
@@ -127,6 +127,52 @@ def resolve_cumsum(scan_impl: str, num_segments: int):
     raise ValueError(f"unknown scan_impl {scan_impl!r}")
 
 
+_INT32_MAX = (1 << 31) - 1
+_LANE_CHUNK = 1 << 14
+
+
+def _lane_partial_sums(x: jax.Array):
+    """Exact sum of a nonnegative int32 vector as four int32 partials.
+
+    ``jnp.sum`` of int32 accumulates in int32 and silently wraps once the
+    total reaches 2³¹ — for the sweep that happens at K ≥ 2³¹ pairs, which a
+    few duplicated extents already produce.  Each element is split into
+    16-bit hi/lo lanes and every lane is summed in chunks of ``_LANE_CHUNK``
+    elements, so every intermediate provably fits int32 (chunk sums
+    < 2¹⁴·2¹⁶ = 2³⁰; the second-level lane sums < 2³⁰ for any input below
+    2²⁸ elements — far beyond what fits in memory).  Returns
+    ``(a, b, c, d)`` with ``sum(x) == (a << 32) + ((b + c) << 16) + d``.
+    """
+
+    def lane_sum(lane):
+        pad = (-lane.shape[0]) % _LANE_CHUNK
+        lane = jnp.concatenate([lane, jnp.zeros((pad,), jnp.int32)])
+        chunk = jnp.sum(lane.reshape(-1, _LANE_CHUNK), axis=1)   # < 2^30 each
+        return jnp.sum(chunk >> 16), jnp.sum(chunk & 0xFFFF)
+
+    a, b = lane_sum(x >> 16)       # sum(x >> 16)  == (a << 16) + b
+    c, d = lane_sum(x & 0xFFFF)    # sum(x & 0xFFFF) == (c << 16) + d
+    return a, b, c, d
+
+
+def _saturate_from_lanes(a, b, c, d):
+    """min(total, 2³¹−1) as int32 from :func:`_lane_partial_sums` partials."""
+    t = b + c                       # each < 2^30 → fits int32
+    low = (t << 16) + d             # wraps negative iff it exceeds int32
+    sat = (a > 0) | (t >= 1 << 15) | (low < 0)
+    return jnp.where(sat, jnp.int32(_INT32_MAX), low)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "scan_impl"))
+def _sbm_count_partials(subs: Extents, upds: Extents, *, num_segments: int,
+                        scan_impl: str):
+    ep = _pad_stream(encode_endpoints(subs, upds), num_segments)
+    sub_lo, sub_up, upd_lo, upd_up = _indicator_deltas(ep)
+    cumsum_fn = resolve_cumsum(scan_impl, num_segments)
+    emit = _emission_counts(sub_lo, sub_up, upd_lo, upd_up, cumsum_fn)
+    return _lane_partial_sums(emit)
+
+
 @functools.partial(jax.jit, static_argnames=("num_segments", "scan_impl"))
 def sbm_count(subs: Extents, upds: Extents, *, num_segments: int = 8,
               scan_impl: str = "two_level") -> jax.Array:
@@ -134,12 +180,34 @@ def sbm_count(subs: Extents, upds: Extents, *, num_segments: int = 8,
 
     ``scan_impl``: 'two_level' (paper Fig. 5), 'blelloch' (tree scan), or
     'xla' (monolithic ``jnp.cumsum`` — the serial-scan reference).
+
+    Overflow contract: the accumulation is exact internally (16-bit lane
+    split, see :func:`_lane_partial_sums`).  With x64 enabled the result is
+    an exact int64; without x64 the int32 result **saturates** at 2³¹−1
+    instead of silently wrapping — callers seeing 2³¹−1 should use
+    :func:`sbm_count_exact` for the true K.
     """
-    ep = _pad_stream(encode_endpoints(subs, upds), num_segments)
-    sub_lo, sub_up, upd_lo, upd_up = _indicator_deltas(ep)
-    cumsum_fn = resolve_cumsum(scan_impl, num_segments)
-    emit = _emission_counts(sub_lo, sub_up, upd_lo, upd_up, cumsum_fn)
-    return jnp.sum(emit).astype(jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32)
+    a, b, c, d = _sbm_count_partials(subs, upds, num_segments=num_segments,
+                                     scan_impl=scan_impl)
+    if jax.config.read("jax_enable_x64"):
+        a, b, c, d = (v.astype(jnp.int64) for v in (a, b, c, d))
+        return (a << 32) + ((b + c) << 16) + d
+    return _saturate_from_lanes(a, b, c, d)
+
+
+def sbm_count_exact(subs: Extents, upds: Extents, *, num_segments: int = 8,
+                    scan_impl: str = "two_level") -> int:
+    """K as an exact Python int, valid beyond 2³¹ even without x64.
+
+    Runs the same jitted lane-partial kernel as :func:`sbm_count` and
+    combines the four int32 partials host-side with arbitrary-precision
+    arithmetic.
+    """
+    if subs.lo.shape[-1] == 0 or upds.lo.shape[-1] == 0:
+        return 0
+    a, b, c, d = _sbm_count_partials(subs, upds, num_segments=num_segments,
+                                     scan_impl=scan_impl)
+    return (int(a) << 32) + ((int(b) + int(c)) << 16) + int(d)
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments",))
@@ -286,13 +354,22 @@ def sbm_count_shard_body(sub_lo, sub_up, upd_lo, upd_up, *, axis_name: str):
     """Per-shard body (call inside shard_map over contiguous sorted shards).
 
     Exactly the paper's three phases with "processor" := device:
-    local deltas → all-gather master combine → local emission.
+    local deltas → all-gather master combine → local emission.  The global
+    reduction follows the same overflow contract as :func:`sbm_count`:
+    per-shard 16-bit lane partials are psum'd (each aggregate provably
+    fits int32 under the same < 2²⁸-element realistic bound as
+    :func:`_lane_partial_sums`) and the result is exact int64 under x64,
+    saturating at 2³¹−1 without — never a silent wrap.
     """
     def cumsum_fn(x):
         return prefix_lib.shard_inclusive_cumsum(x, axis_name)
 
     emit = _emission_counts(sub_lo, sub_up, upd_lo, upd_up, cumsum_fn)
-    return lax.psum(jnp.sum(emit), axis_name)
+    a, b, c, d = (lax.psum(v, axis_name) for v in _lane_partial_sums(emit))
+    if jax.config.read("jax_enable_x64"):
+        a, b, c, d = (v.astype(jnp.int64) for v in (a, b, c, d))
+        return (a << 32) + ((b + c) << 16) + d
+    return _saturate_from_lanes(a, b, c, d)
 
 
 def sbm_count_sharded(subs: Extents, upds: Extents, mesh, axis_name: str):

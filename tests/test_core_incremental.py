@@ -1,0 +1,372 @@
+"""Incremental DDM engine: the persistent endpoint index and delta
+rematching must be *exactly* equivalent to the stateless sweep — any
+interleaving of add/move/remove batches leaves the delta-composed pair set
+equal to a from-scratch enumeration over the live regions (including ties,
+zero-length intervals and rid reuse)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DDMService,
+    Extents,
+    IncrementalIndex,
+    brute_force_pairs_numpy,
+    sbm_enumerate,
+)
+from repro.core.sweep import sequential_sbm_pairs_numpy
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# oracles
+# ---------------------------------------------------------------------------
+
+def _live_extents(live, dims):
+    """dict rid → (lo, hi) → (sorted rids, Extents) with float32 bounds."""
+    ids = sorted(live)
+    lo = np.asarray([live[r][0] for r in ids], np.float32).T
+    hi = np.asarray([live[r][1] for r in ids], np.float32).T
+    if dims == 1:
+        lo, hi = lo.reshape(-1), hi.reshape(-1)
+    return ids, Extents(jnp.asarray(lo), jnp.asarray(hi))
+
+
+def _oracle_pairs(live_s, live_u, dims):
+    """Brute-force pair set over live regions, in rid space."""
+    if not live_s or not live_u:
+        return set()
+    sids, subs = _live_extents(live_s, dims)
+    uids, upds = _live_extents(live_u, dims)
+    return {(sids[i], uids[j])
+            for i, j in brute_force_pairs_numpy(subs, upds)}
+
+
+def _sweep_oracle_pairs(live_s, live_u):
+    """From-scratch sbm_enumerate over live regions (1-d), in rid space —
+    the acceptance-criterion oracle."""
+    if not live_s or not live_u:
+        return set()
+    sids, subs = _live_extents(live_s, 1)
+    uids, upds = _live_extents(live_u, 1)
+    want_k = len(sequential_sbm_pairs_numpy(subs, upds))
+    pairs, count = sbm_enumerate(subs, upds, max_pairs=max(want_k, 1) + 8)
+    assert int(count) == want_k
+    arr = np.asarray(pairs)
+    return {(sids[int(i)], uids[int(j)]) for i, j in arr if i >= 0}
+
+
+def _random_batch(rng, live, next_rid, dims, max_ops=5, integer=True):
+    """One random churn batch (disjoint per-rid ops), mirrored into `live`."""
+    adds, moves, removes = [], [], []
+    used = set()
+
+    def bounds():
+        if integer:
+            lo = rng.randint(0, 25, dims).astype(np.float32)
+            hi = lo + rng.randint(0, 7, dims)
+        else:
+            a = rng.uniform(0, 100, dims)
+            b = rng.uniform(0, 100, dims)
+            lo, hi = np.minimum(a, b), np.maximum(a, b)
+        return (np.asarray(lo, np.float32), np.asarray(hi, np.float32))
+
+    for _ in range(rng.randint(1, max_ops + 1)):
+        side = "sub" if rng.rand() < 0.5 else "upd"
+        op = rng.randint(0, 3)
+        cand = [r for r in live[side] if (side, r) not in used]
+        if op == 0 or not cand:
+            rid = next_rid[side]
+            next_rid[side] += 1
+            lo, hi = bounds()
+            adds.append((side, rid, lo, hi))
+            live[side][rid] = (lo, hi)
+        elif op == 1:
+            rid = cand[rng.randint(len(cand))]
+            lo, hi = bounds()
+            moves.append((side, rid, lo, hi))
+            live[side][rid] = (lo, hi)
+        else:
+            rid = cand[rng.randint(len(cand))]
+            removes.append((side, rid))
+            del live[side][rid]
+        used.add((side, rid))
+    return adds, moves, removes
+
+
+# ---------------------------------------------------------------------------
+# IncrementalIndex: delta composition == from-scratch sweep, every batch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_index_delta_composition_matches_sweep(seed):
+    """Acceptance criterion: 50+ random churn batches; the delta-composed
+    pair set equals a from-scratch sbm_enumerate after every batch
+    (integer bounds → heavy endpoint ties)."""
+    rng = np.random.RandomState(seed)
+    idx = IncrementalIndex(dims=1, capacity=4)   # exercises growth too
+    live = {"sub": {}, "upd": {}}
+    next_rid = {"sub": 0, "upd": 0}
+    pairs = set()
+    for step in range(60):
+        adds, moves, removes = _random_batch(rng, live, next_rid, dims=1)
+        delta = idx.apply_batch(adds=adds, moves=moves, removes=removes)
+        assert not (delta.added & delta.removed)
+        assert not (delta.added & pairs), "added pairs must be new"
+        assert delta.removed <= pairs, "removed pairs must have existed"
+        pairs -= delta.removed
+        pairs |= delta.added
+        want = _sweep_oracle_pairs(live["sub"], live["upd"])
+        assert pairs == want, f"batch {step}: delta drifted from sweep"
+        assert idx.all_pairs() == want
+
+
+def test_index_ddim_batches():
+    rng = np.random.RandomState(11)
+    idx = IncrementalIndex(dims=3, capacity=8)
+    live = {"sub": {}, "upd": {}}
+    next_rid = {"sub": 0, "upd": 0}
+    pairs = set()
+    for step in range(40):
+        adds, moves, removes = _random_batch(rng, live, next_rid, dims=3,
+                                             integer=(step % 2 == 0))
+        delta = idx.apply_batch(adds=adds, moves=moves, removes=removes)
+        pairs -= delta.removed
+        pairs |= delta.added
+        assert pairs == _oracle_pairs(live["sub"], live["upd"], 3), step
+
+
+def test_index_single_move_delta_is_local():
+    """A one-region move reports exactly the pairs it gained/lost."""
+    idx = IncrementalIndex(dims=1)
+    idx.apply_batch(adds=[("sub", 0, 0.0, 10.0), ("sub", 1, 20.0, 30.0),
+                          ("upd", 0, 5.0, 6.0)])
+    d = idx.apply_batch(moves=[("upd", 0, 25.0, 26.0)])
+    assert d.removed == {(0, 0)} and d.added == {(1, 0)}
+    d = idx.apply_batch(moves=[("upd", 0, 15.0, 16.0)])
+    assert d.removed == {(1, 0)} and d.added == set()
+
+
+def test_index_touching_and_zero_length_deltas():
+    """Closed-interval semantics survive the incremental merge: a moved
+    region landing exactly on another's endpoint still matches."""
+    idx = IncrementalIndex(dims=1)
+    idx.apply_batch(adds=[("sub", 0, 0.0, 5.0), ("upd", 0, 9.0, 9.0)])
+    d = idx.apply_batch(moves=[("upd", 0, 5.0, 5.0)])  # zero-length, touching
+    assert d.added == {(0, 0)}
+    d = idx.apply_batch(moves=[("sub", 0, 5.0, 9.0)])  # still touching at 5
+    assert d.added == set() and d.removed == set()
+
+
+def test_index_want_delta_false_still_maintains_index():
+    idx = IncrementalIndex(dims=1)
+    d = idx.apply_batch(adds=[("sub", 0, 0.0, 4.0), ("upd", 0, 2.0, 3.0)],
+                        want_delta=False)
+    assert d.added == set() and d.removed == set()
+    assert idx.all_pairs() == {(0, 0)}
+
+
+def test_index_batch_validation():
+    idx = IncrementalIndex(dims=1)
+    idx.apply_batch(adds=[("sub", 0, 0.0, 1.0)])
+    with pytest.raises(ValueError):      # malformed bounds
+        idx.apply_batch(adds=[("upd", 0, 5.0, 1.0)])
+    with pytest.raises(ValueError):      # duplicate rid in one batch
+        idx.apply_batch(moves=[("sub", 0, 1.0, 2.0)],
+                        removes=[("sub", 0)])
+    with pytest.raises(ValueError):      # add of a live rid
+        idx.apply_batch(adds=[("sub", 0, 0.0, 1.0)])
+    with pytest.raises(KeyError):        # move/remove of a dead rid
+        idx.apply_batch(removes=[("upd", 3)])
+    with pytest.raises(ValueError):      # negative rids would alias slots
+        idx.apply_batch(adds=[("sub", -1, 0.0, 1.0)])
+    assert idx.all_pairs() == set()      # failed batches left no debris
+    assert idx.n_live("sub") == 1 and idx.n_live("upd") == 0
+
+
+def test_index_stream_stays_sorted_under_churn():
+    """The persistent stream invariant: values ascending, lowers before
+    uppers at equal values — after arbitrary splices."""
+    rng = np.random.RandomState(3)
+    idx = IncrementalIndex(dims=1)
+    live = {"sub": {}, "upd": {}}
+    next_rid = {"sub": 0, "upd": 0}
+    for _ in range(30):
+        adds, moves, removes = _random_batch(rng, live, next_rid, dims=1)
+        idx.apply_batch(adds=adds, moves=moves, removes=removes,
+                        want_delta=False)
+        values, is_upper, _, _ = idx.stream()
+        assert values.shape[0] == 2 * (len(live["sub"]) + len(live["upd"]))
+        assert np.all(np.diff(values) >= 0), "stream values must ascend"
+        same = values[1:] == values[:-1]
+        # within an equal-value run, once an upper appears no lower follows
+        assert not np.any(same & is_upper[:-1] & ~is_upper[1:]), \
+            "lowers must precede uppers at equal values"
+
+
+# ---------------------------------------------------------------------------
+# DDMService churn sequences (satellite: oracle check after EVERY batch)
+# ---------------------------------------------------------------------------
+
+def _service_oracle(svc):
+    """From-scratch sequential Algorithm-4 sweep over the live tables."""
+    sl = svc._subs.live_ids()
+    ul = svc._upds.live_ids()
+    if sl.size == 0 or ul.size == 0:
+        return set()
+    subs = svc._subs.compact(sl)
+    upds = svc._upds.compact(ul)
+    if svc.dims > 1:
+        want = brute_force_pairs_numpy(subs, upds)
+    else:
+        want = sequential_sbm_pairs_numpy(subs, upds)
+    return {(int(sl[i]), int(ul[j])) for i, j in want}
+
+
+@pytest.mark.parametrize("seed,dims", [(0, 1), (1, 1), (2, 2), (3, 1)])
+def test_service_churn_sequences_vs_sequential_sweep(seed, dims):
+    """Seeded random interleavings of register/move/unregister, checked
+    pairwise against the sequential sweep after every flushed batch."""
+    rng = np.random.RandomState(seed)
+    svc = DDMService(dims=dims, capacity=128)
+    live_s, live_u = {}, {}
+
+    def bounds():
+        lo = rng.randint(0, 30, dims).astype(float)
+        return lo.tolist(), (lo + rng.randint(0, 8, dims)).tolist()
+
+    svc.all_pairs()                      # warm the cache → delta path active
+    for step in range(50):
+        for _ in range(rng.randint(1, 4)):   # a few ops per batch
+            op = rng.randint(0, 5)
+            if op == 0 or not live_s:
+                lo, hi = bounds()
+                live_s[svc.register_subscription(lo, hi)] = None
+            elif op == 1 or not live_u:
+                lo, hi = bounds()
+                live_u[svc.register_update(lo, hi)] = None
+            elif op == 2:
+                rid = list(live_s)[rng.randint(len(live_s))]
+                lo, hi = bounds()
+                svc.move_subscription(rid, lo, hi)
+            elif op == 3 and len(live_s) > 1:
+                rid = list(live_s)[rng.randint(len(live_s))]
+                svc.unregister_subscription(rid)
+                del live_s[rid]
+            elif op == 4 and len(live_u) > 1:
+                rid = list(live_u)[rng.randint(len(live_u))]
+                svc.unregister_update(rid)
+                del live_u[rid]
+        got = svc.all_pairs()            # flushes the batch, reads the cache
+        want = _service_oracle(svc)
+        assert got == want, f"batch {step}: cached state drifted"
+        assert svc.match_count() == len(want)
+
+
+def test_service_flush_reports_notification_set():
+    """flush() returns exactly the pair delta of the pending batch."""
+    svc = DDMService(dims=1, capacity=64)
+    s1 = svc.register_subscription([0], [10])
+    s2 = svc.register_subscription([20], [30])
+    u = svc.register_update([5], [6])
+    d = svc.flush()
+    assert d.added == {(s1, u)} and d.removed == set()
+    svc.move_update(u, [22], [25])
+    svc.register_update([8], [9])        # same batch: one add + one move
+    d = svc.flush()
+    assert d.removed == {(s1, u)}
+    assert {p for p in d.added if p[0] == s2} == {(s2, u)}
+    assert len(d.added) == 2             # (s2, u) and (s1, new)
+
+
+def test_service_batch_composition_rid_reuse():
+    """remove → re-register reusing the slot composes to an index move."""
+    svc = DDMService(dims=1, capacity=4)
+    s = svc.register_subscription([0], [10])
+    u = svc.register_update([5], [6])
+    assert svc.all_pairs() == {(s, u)}
+    svc.unregister_subscription(s)
+    s2 = svc.register_subscription([100], [110])   # reuses the slot
+    assert s2 == s                        # table free-list guarantees reuse
+    d = svc.flush()
+    assert d.removed == {(s, u)} and d.added == set()
+    assert svc.all_pairs() == set()
+    # add then remove in one batch is a net no-op for the index
+    s3 = svc.register_subscription([5], [6])
+    svc.unregister_subscription(s3)
+    assert svc.flush() == (set(), set())
+    assert svc.all_pairs() == set()
+
+
+def test_service_invalidate_cache_bulk_fallback():
+    """invalidate_cache(): index-only maintenance, one sweep rebuild."""
+    svc = DDMService(dims=1, capacity=64)
+    s = svc.register_subscription([0], [10])
+    u = svc.register_update([5], [6])
+    assert svc.all_pairs() == {(s, u)}   # warm cache
+    svc.invalidate_cache()
+    svc.move_update(u, [20], [30])       # bulk-style: no delta computed
+    assert svc.all_pairs() == set()      # rebuilt via the stateless sweep
+    svc.move_update(u, [8], [9])
+    assert svc.flush().added == {(s, u)}  # delta path active again
+
+
+def test_service_cache_cold_path_still_correct():
+    """Without a warm cache, queries rebuild via the stateless sweep."""
+    svc = DDMService(dims=1, capacity=32)
+    s = svc.register_subscription([0], [10])
+    u = svc.register_update([5], [15])
+    assert svc.match_count() == 1        # count path (no cache yet)
+    svc.move_update(u, [50], [60])
+    assert svc.match_count() == 0
+    assert svc.all_pairs() == set()      # builds the cache
+    svc.move_update(u, [8], [9])
+    assert svc.all_pairs() == {(s, u)}   # delta-maintained
+
+
+# ---------------------------------------------------------------------------
+# region validation at the service boundary (satellite fix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims", [1, 2])
+def test_register_rejects_malformed_regions(dims):
+    svc = DDMService(dims=dims, capacity=8)
+    good_lo, good_hi = [0.0] * dims, [1.0] * dims
+    bad_hi = [1.0] * dims
+    bad_lo = [2.0] * dims                # lo > hi in every dimension
+    with pytest.raises(ValueError):
+        svc.register_subscription(bad_lo, bad_hi)
+    with pytest.raises(ValueError):
+        svc.register_update(bad_lo, bad_hi)
+    with pytest.raises(ValueError):      # wrong-length bounds
+        svc.register_subscription([0.0] * (dims + 1), [1.0] * (dims + 1))
+    with pytest.raises(ValueError):      # NaN never satisfies lo <= hi
+        svc.register_update([np.nan] * dims, good_hi)
+    # nothing leaked into the tables or the pending batch
+    assert svc.match_count() == 0
+    s = svc.register_subscription(good_lo, good_hi)
+    assert svc._subs.live[s]
+
+
+@pytest.mark.parametrize("dims", [1, 2])
+def test_move_rejects_malformed_regions(dims):
+    svc = DDMService(dims=dims, capacity=8)
+    s = svc.register_subscription([0.0] * dims, [10.0] * dims)
+    u = svc.register_update([5.0] * dims, [6.0] * dims)
+    assert svc.match_count() == 1
+    with pytest.raises(ValueError):
+        svc.move_subscription(s, [9.0] * dims, [2.0] * dims)
+    with pytest.raises(ValueError):
+        svc.move_update(u, [0.0] * (dims + 1), [1.0] * (dims + 1))
+    # the failed move neither changed the table nor poisoned the batch
+    assert svc.match_count() == 1
+    assert svc.all_pairs() == {(s, u)}
+
+
+def test_partial_dimension_inversion_rejected():
+    """lo > hi in just ONE dimension must still be rejected."""
+    svc = DDMService(dims=3, capacity=8)
+    with pytest.raises(ValueError):
+        svc.register_subscription([0.0, 5.0, 0.0], [1.0, 2.0, 1.0])

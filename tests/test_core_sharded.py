@@ -55,6 +55,22 @@ _SCRIPT = textwrap.dedent("""
     got_pairs = {(int(i), int(j)) for i, j in np.asarray(pairs) if i >= 0}
     assert int(cnt) == len(want_pairs), (int(cnt), len(want_pairs))
     assert got_pairs == want_pairs
+
+    # K >= 2^31 across shards (duplicated extents): without x64 the count
+    # must pin at the sentinel and the buffer must blank, never mis-stitch
+    n = m = 1 << 16
+    big_s = Extents(jnp.zeros(n, jnp.float32), jnp.ones(n, jnp.float32))
+    big_u = Extents(jnp.full(m, 0.5, jnp.float32), jnp.full(m, 2.0, jnp.float32))
+    pairs_o, cnt_o = sbm_enumerate_sharded(big_s, big_u, mesh, "p",
+                                           max_pairs=16)
+    big_k = int(sbm_count_sharded(big_s, big_u, mesh, "p"))
+    if jax.config.read("jax_enable_x64"):
+        assert int(cnt_o) == n * m
+        assert big_k == n * m
+    else:
+        assert int(cnt_o) == 2**31 - 1, int(cnt_o)
+        assert np.all(np.asarray(pairs_o) == -1)
+        assert big_k == 2**31 - 1, big_k    # saturates, never wraps
     print("SHARDED_OK", want)
 """)
 

@@ -13,6 +13,7 @@ from repro.core import (
     brute_force_count_numpy,
     make_uniform_workload,
     sbm_count,
+    sbm_count_exact,
     sequential_sbm_count_numpy,
     sequential_sbm_pairs_numpy,
 )
@@ -151,6 +152,68 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=60, deadline=None)
     def test_property_count_and_pairs_equal_brute_force(data):
         _check_counts_and_pairs(*data)
+
+
+# ---------------------------------------------------------------------------
+# wide accumulation: K ≥ 2³¹ must not wrap (regression for the silent
+# int32 overflow in jnp.sum(emit) / the enumeration offset table)
+# ---------------------------------------------------------------------------
+
+def _all_overlapping(n, m):
+    """Duplicated extents: K = n·m with a stream of only 2(n+m) endpoints —
+    the cheap construction for counts beyond 2³¹."""
+    subs = Extents(jnp.zeros(n, jnp.float32), jnp.ones(n, jnp.float32))
+    upds = Extents(jnp.full(m, 0.5, jnp.float32), jnp.full(m, 2.0, jnp.float32))
+    return subs, upds
+
+
+def test_count_beyond_int32_is_exact_and_saturates():
+    n = m = 1 << 16                      # K = 2³² > 2³¹
+    subs, upds = _all_overlapping(n, m)
+    assert sbm_count_exact(subs, upds) == n * m
+    got = int(sbm_count(subs, upds))
+    if jax.config.read("jax_enable_x64"):
+        assert got == n * m              # exact int64
+    else:
+        assert got == 2**31 - 1          # documented sentinel, never a wrap
+
+
+def test_count_exact_agrees_below_int32():
+    for seed in range(3):
+        subs, upds = make_uniform_workload(jax.random.PRNGKey(seed), 120, 90,
+                                           alpha=5.0, length=500.0)
+        want = brute_force_count_numpy(subs, upds)
+        assert sbm_count_exact(subs, upds) == want == int(sbm_count(subs, upds))
+    assert sbm_count_exact(*_mk([], [], [1.0], [2.0])) == 0
+
+
+def test_enumerate_offsets_beyond_int32():
+    """With K ≥ 2³¹ the offset table must stay monotonic (saturate, not
+    wrap): emitted pairs are still genuine and the count pins at the
+    sentinel instead of going negative."""
+    from repro.core import sbm_enumerate
+    n = m = 1 << 16
+    subs, upds = _all_overlapping(n, m)
+    pairs, count = sbm_enumerate(subs, upds, max_pairs=16)
+    got = int(count)
+    if jax.config.read("jax_enable_x64"):
+        assert got == n * m
+    else:
+        assert got == 2**31 - 1
+    arr = np.asarray(pairs)
+    assert np.all(arr >= 0) and np.all(arr[:, 0] < n) and np.all(arr[:, 1] < m)
+
+
+def test_saturating_cumsum_contract():
+    from repro.core.prefix import cumsum_saturating_i32
+    x = jnp.asarray([1, 2, 3, 4], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(cumsum_saturating_i32(x)),
+                                  [1, 3, 6, 10])          # exact below 2³¹
+    big = jnp.full((5,), 2**30, jnp.int32)
+    got = np.asarray(cumsum_saturating_i32(big))
+    assert got[0] == 2**30 and got[1] == 2**31 - 1        # saturated
+    assert np.all(np.diff(got) >= 0), "must stay monotonic past saturation"
+    assert got[-1] == 2**31 - 1
 
 
 def test_algorithm6_active_sets_match_sequential():
