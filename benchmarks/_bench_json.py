@@ -1,0 +1,43 @@
+"""Shared JSON recording for the benchmark harnesses (the CI perf gate).
+
+Benchmarks print ``name,us_per_call,derived`` CSV rows; ``--json PATH``
+additionally serializes them as ``{"rows": {name: {"us": ..., "derived":
+...}}, "meta": {...}}`` so the CI bench-smoke job can diff a run against
+the committed baseline (``benchmarks/check_regression.py``) and archive
+the artifact per commit — the perf trajectory of the repo.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import sys
+from typing import Dict, List, Optional
+
+
+def parse_rows(rows: List[str]) -> Dict[str, Dict[str, object]]:
+    """``name,us_per_call,derived`` strings → ``{name: {us, derived}}``."""
+    out: Dict[str, Dict[str, object]] = {}
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        out[name] = {"us": float(us), "derived": derived}
+    return out
+
+
+def write_json(
+    path: str, rows: List[str], meta: Optional[Dict[str, object]] = None
+) -> None:
+    payload = {
+        "rows": parse_rows(rows),
+        "meta": {
+            "python": sys.version.split()[0],
+            "platform": platform.platform(),
+            # coarse signature for the timing-gate platform match: a
+            # kernel/glibc micro-version bump must not disarm the gate
+            "system": platform.system(),
+            "machine": platform.machine(),
+            **(meta or {}),
+        },
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+        fh.write("\n")

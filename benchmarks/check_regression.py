@@ -1,0 +1,174 @@
+"""The CI benchmark-regression gate.
+
+Compares a fresh ``--json`` benchmark dump against the committed baseline
+(``benchmarks/BENCH_baseline.json``) and exits nonzero when
+
+* a **timing** regresses beyond the tolerance band — current > TOLERANCE ×
+  baseline for any row whose baseline time is above the noise floor
+  (sub-``FLOOR_US`` rows are jitter-dominated on shared runners and are
+  reported but never gating).  Gated rows must be warm min-of-N
+  measurements (``benchmarks.matching._time_min`` /
+  ``benchmarks.churn.single_move``) — a mean at millisecond scale is one
+  contention spike away from a spurious failure — or
+* a **derived invariant** (``K=``/``pairs=`` counts — deterministic
+  functions of the seeded workloads) changed, which means an engine
+  changed behavior, not speed.
+
+Rows present on only one side are reported as informational: adding a
+benchmark must not require regenerating history, and retiring one must not
+break the gate.  Regenerate the baseline on a representative runner from
+SEVERAL runs — ``--merge`` keeps each row's **slowest** timing, so the
+2x band measures against the worst accepted run, not a lucky fast one::
+
+    for i in 1 2 3; do
+      python -m benchmarks.matching --smoke --json /tmp/m$i.json
+      python -m benchmarks.churn --smoke --json /tmp/c$i.json
+    done
+    python -m benchmarks.check_regression --merge /tmp/m*.json /tmp/c*.json \
+        --out benchmarks/BENCH_baseline.json
+
+Usage (the CI invocation)::
+
+    python -m benchmarks.check_regression BENCH_smoke_*.json \
+        --baseline benchmarks/BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+TOLERANCE = 2.0  # fail on > 2x slowdown
+# Baseline timings below the floor are jitter-dominated and never gate.
+# The gated smoke rows are warm min-of-N measurements (_time_min /
+# single_move's per-rep minimum) in the 1-5 ms range, so 1 ms keeps them
+# armed while excluding the sub-ms churn delta rows.
+FLOOR_US = 1_000.0
+
+
+def _load(path: str):
+    with open(path) as fh:
+        payload = json.load(fh)
+    return payload["rows"], payload.get("meta", {})
+
+
+def _platform_tag(meta: Dict[str, object]) -> str:
+    """Hardware/interpreter signature a timing baseline is valid for.
+
+    Deliberately coarse — python minor + OS + arch.  Kernel or glibc
+    micro-versions (present in meta['platform']) churn with every runner
+    image update and must not silently disarm the timing gate.
+    """
+    python = str(meta.get("python", "?"))
+    minor = ".".join(python.split(".")[:2])
+    system = meta.get("system") or str(meta.get("platform", "?")).split("-")[0]
+    return f"py{minor}:{system}:{meta.get('machine', '?')}"
+
+
+def _is_count(derived: str) -> bool:
+    return derived.startswith(("K=", "pairs="))
+
+
+def compare(current: Dict, baseline: Dict, gate_timings: bool) -> int:
+    failures = 0
+    for name in sorted(set(current) | set(baseline)):
+        if name not in baseline:
+            print(f"NEW      {name} (no baseline — informational)")
+            continue
+        if name not in current:
+            print(f"RETIRED  {name} (in baseline only — informational)")
+            continue
+        cur, base = current[name], baseline[name]
+        if _is_count(str(base["derived"])) and cur["derived"] != base["derived"]:
+            print(
+                f"FAIL     {name}: derived {cur['derived']!r} != "
+                f"baseline {base['derived']!r} (engine behavior changed)"
+            )
+            failures += 1
+            continue
+        cur_us, base_us = float(cur["us"]), float(base["us"])
+        if gate_timings and base_us >= FLOOR_US and cur_us > TOLERANCE * base_us:
+            print(
+                f"FAIL     {name}: {cur_us:.0f}us > {TOLERANCE:g}x "
+                f"baseline {base_us:.0f}us"
+            )
+            failures += 1
+        else:
+            ratio = cur_us / max(base_us, 1e-9)
+            tag = "ok" if base_us < FLOOR_US or not gate_timings else f"{ratio:.2f}x"
+            print(f"OK       {name}: {cur_us:.0f}us vs {base_us:.0f}us ({tag})")
+    return failures
+
+
+def merge(paths, out: str) -> None:
+    """Union of rows; repeated rows keep the SLOWEST timing (headroom
+    against contention under the fixed 2x band) and must agree on counts."""
+    rows: Dict[str, Dict[str, object]] = {}
+    meta: Dict[str, object] = {}
+    for p in paths:
+        with open(p) as fh:
+            payload = json.load(fh)
+        for name, row in payload["rows"].items():
+            prev = rows.get(name)
+            if prev is not None and _is_count(str(prev["derived"])):
+                if prev["derived"] != row["derived"]:
+                    raise SystemExit(
+                        f"{name}: derived {row['derived']!r} != "
+                        f"{prev['derived']!r} across merge inputs"
+                    )
+            if prev is None or float(row["us"]) > float(prev["us"]):
+                rows[name] = row
+        meta.update(payload.get("meta", {}))
+    with open(out, "w") as fh:
+        json.dump({"rows": rows, "meta": meta}, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {out} ({len(rows)} rows)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "current",
+        nargs="+",
+        help="fresh --json dump(s); with --merge, the inputs to merge",
+    )
+    ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json")
+    ap.add_argument(
+        "--merge",
+        action="store_true",
+        help="merge the inputs into --out instead of comparing",
+    )
+    ap.add_argument("--out", default="benchmarks/BENCH_baseline.json")
+    args = ap.parse_args()
+    if args.merge:
+        merge(args.current, args.out)
+        return
+    current: Dict[str, Dict[str, object]] = {}
+    cur_meta: Dict[str, object] = {}
+    for p in args.current:
+        rows, meta = _load(p)
+        current.update(rows)
+        cur_meta.update(meta)
+    base_rows, base_meta = _load(args.baseline)
+    # Timings only gate against a baseline measured on matching hardware —
+    # a dev-container baseline must not fail (or vacuously pass) CI runs.
+    # Counts gate everywhere.  When the platforms differ, a maintainer
+    # promotes a CI artifact to benchmarks/BENCH_baseline.json (--merge)
+    # to arm the timing gate for that platform.
+    gate_timings = _platform_tag(cur_meta) == _platform_tag(base_meta)
+    if not gate_timings:
+        print(
+            f"NOTE     baseline platform {_platform_tag(base_meta)!r} != "
+            f"current {_platform_tag(cur_meta)!r}: timings informational, "
+            "counts still gate; promote this run's artifact to re-arm"
+        )
+    failures = compare(current, base_rows, gate_timings)
+    if failures:
+        print(f"{failures} benchmark regression(s)")
+        sys.exit(1)
+    print("bench gate: no regressions")
+
+
+if __name__ == "__main__":
+    main()

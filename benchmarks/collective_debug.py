@@ -16,8 +16,6 @@ def main() -> None:
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
     from repro.launch import hlo_analysis as H
-    from repro.launch.dryrun import run_cell
-    import repro.launch.dryrun as dr
     import jax
 
     # reuse run_cell's lowering path but keep the compiled text
@@ -65,7 +63,6 @@ def main() -> None:
 
     comps = H._split_computations(text)
     children = {c: [] for c in comps}
-    import re
     for name, lines in comps.items():
         for line in lines:
             m = H._WHILE_RE.search(line)

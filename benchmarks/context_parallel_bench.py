@@ -26,7 +26,6 @@ def run(rows: List[str]) -> None:
 
 
 def _run(rows: List[str]) -> None:
-    import dataclasses
     import jax
     import jax.numpy as jnp
     from repro.compat import shard_map
@@ -36,7 +35,6 @@ def _run(rows: List[str]) -> None:
     from repro.launch.hlo_analysis import collective_bytes
     from repro.launch.mesh import make_production_mesh
     from repro.models import transformer as tf_lib
-    from repro.models.api import init_params, param_shapes
     from repro.models.common import rmsnorm
     from repro.parallel.context_parallel import (halo_window_attention,
                                                  ring_attention)

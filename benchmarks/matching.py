@@ -1,31 +1,37 @@
 """Paper Figs. 7a / 8a / 8b: wall-clock of BF vs ITM-analogue (rank) vs SBM
 as functions of algorithm, N, and the overlapping degree α — plus the
 *enumeration* mode (count vs pair reporting, sweep emission vs blocked
-all-pairs).
+all-pairs) and the *d-dimensional* mode (dim-0-then-filter baseline vs
+selective-dimension sweep vs bit-matrix AND, DESIGN.md §8).
 
 Methodology follows the paper §5: N extents (half subscriptions), identical
 length l = αL/N uniformly placed on L = 1e6; measurements average multiple
 runs after a warmup (jit) run.  Scaled to CPU-feasible N (the paper's
 asymptotics are the claim under test: SBM polylog growth in N,
 α-independence, ≫BF; for enumeration, output-sensitivity: sweep emission
-cost ~ K, blocked all-pairs cost ~ n·m).
+cost ~ K, blocked all-pairs cost ~ n·m; for d-dim, candidate-buffer
+sensitivity: selective/bit-matrix ~ K on the tall-thin adversary where the
+dim-0 baseline is ~ n·m).
 
-Run standalone with ``python -m benchmarks.matching [--only enumeration]``
-or through ``python -m benchmarks.run --only matching``.
+Run standalone with ``python -m benchmarks.matching [--only enumeration]
+[--only ddim --ndim 2 --workload tall_thin] [--json PATH]`` or through
+``python -m benchmarks.run --only matching``.
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List
+from typing import Callable, List
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import (bf_count, enumerate_matches, make_clustered_workload,
-                        make_uniform_workload, rank_count, sbm_count,
-                        sbm_enumerate)
+from repro.core import (bf_count, bitmatrix_count, bitmatrix_enumerate,
+                        enumerate_matches, enumerate_matches_ddim,
+                        make_clustered_workload, make_uniform_workload,
+                        rank_count, sbm_count, sbm_enumerate,
+                        select_dimension)
 from repro.core.enumerate import round_up_pow2
 from repro.core.sweep import sequential_sbm_count_numpy
+from repro.data.synthetic import ddm_workload
 
 REPS = 5
 
@@ -38,6 +44,20 @@ def _time(fn: Callable, *args, reps: int = REPS) -> float:
         out = fn(*args)
         jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps
+
+
+def _time_min(fn: Callable, *args, reps: int = 15) -> float:
+    """Per-call *minimum* after a warmup — the contention-robust estimator
+    for the millisecond-scale rows the CI bench gate compares against the
+    committed baseline (a mean at that scale is one noisy neighbor away
+    from a spurious 2x failure)."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def wct_vs_algorithm(rows: List[str]) -> None:
@@ -139,6 +159,65 @@ def enumeration(rows: List[str]) -> None:
                         f"{dt_blocked/dt_sweep:.1f},sweep_vs_blocked_x")
 
 
+def ddim(rows: List[str], *, ndim: int = 2,
+         workload: str = "tall_thin") -> None:
+    """d-dim engines head-to-head (DESIGN.md §8): the dim-0-then-filter
+    baseline vs the selective-dimension sweep vs the bit-matrix AND.
+
+    On the tall-thin adversary the baseline's candidate buffer is the full
+    dim-0 match count (n·m — every pair overlaps in the wide dimension)
+    while selective/bit-matrix buffers scale with the final K, so the
+    head-to-head runs at a scale where the baseline's O(n·m) buffer still
+    fits; a second, larger cell reports the K-proportional engines alone
+    (the baseline would need gigabytes there).
+    """
+    tag = f"d{ndim}_{workload}"
+    n = 8_192
+    subs, upds = ddm_workload(workload, jax.random.PRNGKey(5), n // 2,
+                              n // 2, alpha=10.0, d=ndim)
+    gen, counts = select_dimension(subs, upds)
+    k = int(bitmatrix_count(subs, upds))
+    cap0 = round_up_pow2(max(counts[0], 1))
+    cap_gen = round_up_pow2(max(counts[gen], 1))
+    cap_k = round_up_pow2(max(k, 1))
+
+    pairs_base, cnt_base = enumerate_matches_ddim(
+        subs, upds, max_pairs=cap0, method="sweep", generator_dim=0)
+    pairs_sel, cnt_sel = enumerate_matches_ddim(
+        subs, upds, max_pairs=cap_gen, method="sweep")
+    pairs_bm, cnt_bm = bitmatrix_enumerate(subs, upds, max_pairs=cap_k)
+    assert int(cnt_base) == int(cnt_sel) == int(cnt_bm) == k, (
+        int(cnt_base), int(cnt_sel), int(cnt_bm), k)
+
+    dt_base = _time(lambda: enumerate_matches_ddim(
+        subs, upds, max_pairs=cap0, method="sweep", generator_dim=0))
+    dt_sel = _time(lambda: enumerate_matches_ddim(
+        subs, upds, max_pairs=cap_gen, method="sweep"))
+    dt_bm = _time(lambda: bitmatrix_enumerate(subs, upds, max_pairs=cap_k))
+    rows.append(f"ddim_baseline_dim0_{tag}_n{n},{dt_base*1e6:.1f},"
+                f"K={k};cap={cap0}")
+    rows.append(f"ddim_selective_{tag}_n{n},{dt_sel*1e6:.1f},"
+                f"K={k};cap={cap_gen};gen={gen}")
+    rows.append(f"ddim_bitmatrix_{tag}_n{n},{dt_bm*1e6:.1f},K={k};cap={cap_k}")
+    rows.append(f"ddim_speedup_{tag}_n{n},"
+                f"{dt_base/min(dt_sel, dt_bm):.1f},best_vs_dim0_x")
+
+    # the larger cell: K-proportional engines only (count form for the bit
+    # matrix — its packed words stay 32x smaller than any boolean mask)
+    n = 65_536
+    subs, upds = ddm_workload(workload, jax.random.PRNGKey(6), n // 2,
+                              n // 2, alpha=10.0, d=ndim)
+    gen, counts = select_dimension(subs, upds)
+    cap_gen = round_up_pow2(max(counts[gen], 1))
+    k = int(bitmatrix_count(subs, upds))
+    dt_sel = _time(lambda: enumerate_matches_ddim(
+        subs, upds, max_pairs=cap_gen, method="sweep"))
+    dt_bmc = _time(lambda: bitmatrix_count(subs, upds))
+    rows.append(f"ddim_selective_{tag}_n{n},{dt_sel*1e6:.1f},"
+                f"K={k};cap={cap_gen};gen={gen};dim0_cap={counts[0]}")
+    rows.append(f"ddim_bitmatrix_count_{tag}_n{n},{dt_bmc*1e6:.1f},K={k}")
+
+
 def smoke(rows: List[str]) -> None:
     """CI smoke: tiny N through every engine + enumeration, agreement
     asserted — guards the benchmark entry points against silent rot."""
@@ -155,6 +234,46 @@ def smoke(rows: List[str]) -> None:
     _, cnt_b = enumerate_matches(subs, upds, max_pairs=cap, block=256)
     assert int(cnt_b) == k
     rows.append(f"matching_smoke_n{n},0,K={k}")
+    # warm timings (the agreement pass above compiled everything) — these
+    # rows arm the CI bench-regression gate, so they must measure engine
+    # runtime, not first-call tracing, with the min-of-N estimator
+    # (_time_min) that shrugs off runner contention spikes
+    dt_count = _time_min(lambda: sbm_count(subs, upds, num_segments=8))
+    dt_enum = _time_min(lambda: sbm_enumerate(subs, upds, max_pairs=cap,
+                                              num_segments=8))
+    rows.append(f"matching_smoke_count_n{n},{dt_count*1e6:.1f},")
+    rows.append(f"matching_smoke_enum_n{n},{dt_enum*1e6:.1f},")
+
+    # d-dim smoke: every d-dim engine agrees on the tall-thin adversary,
+    # with the selective/bit-matrix buffers sized by the final K (the
+    # dim-0 candidate count would be n*m/4)
+    from repro.core import brute_force_pairs_numpy
+    from repro.kernels import sbm_bitmatrix_kernel
+    import numpy as np
+    n2 = 400
+    subs2, upds2 = ddm_workload("tall_thin", jax.random.PRNGKey(1), n2 // 2,
+                                n2 // 2, alpha=10.0, d=2)
+    want = brute_force_pairs_numpy(subs2, upds2)
+    gen, counts = select_dimension(subs2, upds2)
+    assert gen != 0 and counts[0] == (n2 // 2) ** 2, (gen, counts)
+    cap2 = round_up_pow2(max(counts[gen], 1))
+    cap_k = round_up_pow2(max(len(want), 1))
+    for method, mp in (("sweep", cap2), ("bitmatrix", cap_k)):
+        p, c = enumerate_matches_ddim(subs2, upds2, max_pairs=mp,
+                                      method=method)
+        got = {(int(i), int(j)) for i, j in np.asarray(p) if i >= 0}
+        assert got == want and int(c) == len(want), method
+    p, c = sbm_bitmatrix_kernel(subs2, upds2, max_pairs=cap_k)
+    got = {(int(i), int(j)) for i, j in np.asarray(p) if i >= 0}
+    assert got == want and int(c) == len(want), "bitmatrix kernel"
+    rows.append(f"ddim_smoke_talln{n2},0,K={len(want)}")
+    dt_sel = _time_min(lambda: enumerate_matches_ddim(subs2, upds2,
+                                                      max_pairs=cap2))
+    dt_bm = _time_min(lambda: enumerate_matches_ddim(subs2, upds2,
+                                                     max_pairs=cap_k,
+                                                     method="bitmatrix"))
+    rows.append(f"ddim_smoke_selective_n{n2},{dt_sel*1e6:.1f},")
+    rows.append(f"ddim_smoke_bitmatrix_n{n2},{dt_bm*1e6:.1f},")
 
 
 def run(rows: List[str]) -> None:
@@ -163,6 +282,7 @@ def run(rows: List[str]) -> None:
     wct_vs_alpha(rows)
     scan_impl_sweep(rows)
     enumeration(rows)
+    ddim(rows, ndim=2, workload="tall_thin")
 
 
 if __name__ == "__main__":
@@ -170,15 +290,28 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     choices=["all", "enumeration", "algorithm", "n", "alpha",
-                             "scan"])
+                             "scan", "ddim"])
+    ap.add_argument("--ndim", type=int, default=2,
+                    help="dimensionality of the --only ddim cell")
+    ap.add_argument("--workload", default="tall_thin",
+                    choices=["uniform", "clustered", "tall_thin"],
+                    help="region placement of the --only ddim cell")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-N CI guard (engine agreement asserted)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (the CI bench gate input)")
     args = ap.parse_args()
     fns = {"all": run, "enumeration": enumeration,
            "algorithm": wct_vs_algorithm, "n": wct_vs_n,
-           "alpha": wct_vs_alpha, "scan": scan_impl_sweep}
+           "alpha": wct_vs_alpha, "scan": scan_impl_sweep,
+           "ddim": lambda rows: ddim(rows, ndim=args.ndim,
+                                     workload=args.workload)}
     rows: List[str] = []
     print("name,us_per_call,derived")
     (smoke if args.smoke else fns[args.only])(rows)
     for r in rows:
         print(r, flush=True)
+    if args.json:
+        from benchmarks._bench_json import write_json
+        write_json(args.json, rows, meta={"module": "matching",
+                                          "smoke": args.smoke})

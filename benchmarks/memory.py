@@ -10,13 +10,11 @@ per-segment partials grow with P.
 from __future__ import annotations
 
 import resource
-import time
 from typing import List
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import bf_count, make_uniform_workload, rank_count, sbm_count
+from repro.core import make_uniform_workload, sbm_count
 
 
 def _rss_mb() -> float:

@@ -11,13 +11,12 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.models.api import LayerSpec, ModelConfig
+from repro.models.api import ModelConfig
 
 ARCH_IDS = (
     "granite-moe-3b-a800m",

@@ -9,6 +9,8 @@ Public surface:
   bf_count, bf_count_sharded               — brute force (Algorithm 2)
   grid_count                               — grid-based matching (§3.2)
   sbm_enumerate, sbm_enumerate_sharded     — sweep pair enumeration (O(K))
+  enumerate_matches_ddim, select_dimension — d-dim selective-dimension sweep
+  bitmatrix_count/enumerate/sharded        — d-dim packed bit-matrix AND
   enumerate_matches, match_matrix, ...     — oracle/structure reporting
   IncrementalIndex, BatchDelta             — persistent index + delta rematch
   DDMService                               — HLA-style service facade
@@ -19,6 +21,7 @@ from repro.core.intervals import (
     intersect_ddim,
     make_uniform_workload,
     make_clustered_workload,
+    make_tall_thin_workload,
     brute_force_count_numpy,
     brute_force_pairs_numpy,
 )
@@ -32,6 +35,7 @@ from repro.core.sweep import (
     active_sets_at_segment_starts,
     sequential_sbm_count_numpy,
     sequential_sbm_pairs_numpy,
+    sequential_sbm_pairs_numpy_ddim,
 )
 from repro.core.rank import (
     rank_count,
@@ -43,10 +47,18 @@ from repro.core.brute_force import bf_count, bf_count_sharded
 from repro.core.grid import grid_count
 from repro.core.enumerate import (
     enumerate_matches,
-    enumerate_matches_ddim,
     enumerate_matches_sweep_numpy,
     sbm_enumerate,
     sbm_enumerate_sharded,
+)
+from repro.core.ddim import (
+    bitmatrix_count,
+    bitmatrix_enumerate,
+    bitmatrix_sharded,
+    bitmatrix_words,
+    enumerate_matches_ddim,
+    per_dimension_counts,
+    select_dimension,
 )
 from repro.core.matrix import (
     match_matrix,
@@ -61,15 +73,19 @@ from repro.core.service import DDMService
 
 __all__ = [
     "Extents", "intersect_1d", "intersect_ddim", "make_uniform_workload",
-    "make_clustered_workload", "brute_force_count_numpy", "brute_force_pairs_numpy",
+    "make_clustered_workload", "make_tall_thin_workload",
+    "brute_force_count_numpy", "brute_force_pairs_numpy",
     "EndpointStream", "encode_endpoints", "sbm_count", "sbm_count_exact",
     "sbm_count_sharded",
     "sbm_active_profile", "active_sets_at_segment_starts",
     "sequential_sbm_count_numpy", "sequential_sbm_pairs_numpy",
+    "sequential_sbm_pairs_numpy_ddim",
     "rank_count", "rank_count_sharded", "per_sub_match_counts",
     "per_upd_match_counts", "bf_count", "bf_count_sharded", "grid_count",
     "enumerate_matches", "enumerate_matches_ddim", "enumerate_matches_sweep_numpy",
     "sbm_enumerate", "sbm_enumerate_sharded",
+    "bitmatrix_count", "bitmatrix_enumerate", "bitmatrix_sharded",
+    "bitmatrix_words", "per_dimension_counts", "select_dimension",
     "match_matrix", "match_matrix_ddim", "row_index_lists",
     "block_extents_for_sequence", "block_mask_from_extents", "document_extents",
     "BatchDelta", "IncrementalIndex", "DDMService",

@@ -309,41 +309,5 @@ def enumerate_matches_sweep_numpy(subs: Extents, upds: Extents) -> np.ndarray:
     return np.asarray(pairs, np.int32)
 
 
-# ---------------------------------------------------------------------------
-# d-dimensional composition (paper §3: match on dim 0, filter on the rest)
-# ---------------------------------------------------------------------------
-
-def enumerate_matches_ddim(subs: Extents, upds: Extents, *, max_pairs: int,
-                           block: int = 256, method: str = "sweep",
-                           num_segments: int = 8):
-    """d-dimensional enumeration: dim-0 candidates filtered by dims 1..d-1
-    (paper §3: d-rectangles overlap iff every projection overlaps).
-
-    ``method``: 'sweep' (default) dispatches the dim-0 candidate pass to the
-    output-sensitive :func:`sbm_enumerate`; 'blocked' keeps the all-pairs
-    oracle.  ``max_pairs`` must bound the *dim-0* match count (candidates
-    before filtering); the returned count is the post-filter pair count.
-    """
-    if method == "sweep":
-        def dim0(a, b):
-            return sbm_enumerate(a, b, max_pairs=max_pairs,
-                                 num_segments=num_segments)
-    elif method == "blocked":
-        def dim0(a, b):
-            return enumerate_matches(a, b, max_pairs=max_pairs, block=block)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    if subs.ndim_space == 1:
-        return dim0(subs, upds)
-    pairs, count = dim0(subs.dim(0), upds.dim(0))
-    valid = pairs[:, 0] >= 0
-    i = jnp.maximum(pairs[:, 0], 0)
-    j = jnp.maximum(pairs[:, 1], 0)
-    keep = valid
-    for d in range(1, subs.ndim_space):
-        keep = keep & intersect_1d(subs.lo[d, i], subs.hi[d, i],
-                                   upds.lo[d, j], upds.hi[d, j])
-    pairs = jnp.where(keep[:, None], pairs, -1)
-    # compact (stable) so valid pairs are contiguous
-    order = jnp.argsort(~keep, stable=True)
-    return pairs[order], jnp.sum(keep.astype(jnp.int32))
+# The d-dimensional composition (selective-dimension sweep + bit-matrix
+# AND) lives in repro.core.ddim; it layers on the 1-d engines above.

@@ -15,7 +15,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.core.intervals import Extents, intersect_1d
 

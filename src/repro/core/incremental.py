@@ -5,11 +5,12 @@ is a *churn* workload: federates continuously move, register and unregister
 regions (Pan et al.'s dynamic DDM; the journal follow-up arXiv:1911.03456
 makes the dynamic-interval-management setting explicit).  Rebuilding the
 world for one moved region costs the full O((n+m)·log(n+m)) sort; this
-module keeps the sorted :class:`~repro.core.sweep.EndpointStream` *live*
-across queries and pays per batch of ``b`` changed regions only
+module keeps one sorted endpoint stream *per dimension* live across
+queries (the per-dimension passes are independent — arXiv:1309.3458) and
+pays per batch of ``b`` changed regions only
 
-* O(b·log b) to sort the 2·b delta endpoints,
-* O(n+m) single vectorized passes to splice them into the index, and
+* O(d·b·log b) to sort the 2·b delta endpoints per dimension,
+* O(d·(n+m)) single vectorized passes to splice them into the index, and
 * one vectorized O(m_counterpart) closed-interval rematch per changed
   region (output O(K_changed)) to re-derive exactly the pairs the batch
   gained and lost — O(b·log b + n + m + b·m) per batch in total,
@@ -117,14 +118,17 @@ class _Prep:
 class IncrementalIndex:
     """Persistent sorted endpoint index over live DDM regions.
 
-    Maintains the dim-0 endpoint stream of :func:`encode_endpoints` sorted
-    across arbitrary interleavings of region adds, moves and removes, by
-    sorting only each batch's 2·b delta endpoints and splicing them in with
-    single vectorized passes.  :meth:`apply_batch` additionally returns the
-    exact :class:`BatchDelta` of match pairs the batch created/destroyed;
-    :meth:`all_pairs` enumerates the full current match set from the index
-    without re-sorting.  d > 1 uses the dim-0 stream for candidates and
-    filters the remaining projections per pair (paper §3).
+    Maintains **one endpoint stream per dimension** (the per-dimension
+    passes of the journal algorithm are independent — arXiv:1309.3458),
+    each sorted across arbitrary interleavings of region adds, moves and
+    removes by sorting only the batch's 2·b delta endpoints and splicing
+    them in with single vectorized passes.  :meth:`apply_batch`
+    additionally returns the exact :class:`BatchDelta` of match pairs the
+    batch created/destroyed; :meth:`all_pairs` enumerates the full current
+    match set from the index without re-sorting, generating candidates on
+    the most *selective* dimension (fewest 1-d matches, read off the
+    per-dim rank tables in O(n+m)) and filtering the remaining projections
+    per pair (DESIGN.md §8).
     """
 
     def __init__(self, dims: int = 1, capacity: int = 64):
@@ -135,13 +139,14 @@ class IncrementalIndex:
         self._lo = {s: np.full((dims, cap), np.inf, np.float32) for s in _SIDES}
         self._hi = {s: np.full((dims, cap), -np.inf, np.float32) for s in _SIDES}
         self._live = {s: np.zeros(cap, bool) for s in _SIDES}
-        # the persistent sorted stream (values ascending, lowers before
-        # uppers at equal values — the closed-interval tie-break)
-        self._values = np.zeros(0, np.float32)
-        self._is_upper = np.zeros(0, bool)
-        self._is_sub = np.zeros(0, bool)
-        self._owner = np.zeros(0, np.int32)
-        self._prep: _Prep | None = None
+        # the persistent sorted streams, one per dimension (values
+        # ascending, lowers before uppers at equal values — the
+        # closed-interval tie-break)
+        self._values = [np.zeros(0, np.float32) for _ in range(dims)]
+        self._is_upper = [np.zeros(0, bool) for _ in range(dims)]
+        self._is_sub = [np.zeros(0, bool) for _ in range(dims)]
+        self._owner = [np.zeros(0, np.int32) for _ in range(dims)]
+        self._prep: List[Optional[_Prep]] = [None] * dims
 
     # -- introspection -----------------------------------------------------
     def n_live(self, side: str) -> int:
@@ -155,9 +160,10 @@ class IncrementalIndex:
             raise KeyError(f"{side} region {rid} not in index")
         return self._lo[side][:, rid].copy(), self._hi[side][:, rid].copy()
 
-    def stream(self):
-        """(values, is_upper, is_sub, owner) views of the sorted stream."""
-        return self._values, self._is_upper, self._is_sub, self._owner
+    def stream(self, dim: int = 0):
+        """(values, is_upper, is_sub, owner) views of one sorted stream."""
+        return (self._values[dim], self._is_upper[dim],
+                self._is_sub[dim], self._owner[dim])
 
     # -- capacity ----------------------------------------------------------
     def _ensure_capacity(self, side: str, rid: int) -> None:
@@ -237,7 +243,7 @@ class IncrementalIndex:
             self._hi[side][:, rid] = hi
             self._live[side][rid] = True
         self._insert_records(inserts)
-        self._prep = None
+        self._prep = [None] * self.dims
 
         # pairs the changed regions participate in *after* the batch
         new_pairs: Set[Tuple[int, int]] = set()
@@ -257,54 +263,62 @@ class IncrementalIndex:
         drop = {s: np.zeros(size, bool) for s in _SIDES}
         for side, rid in keys:
             drop[side][rid] = True
-        gone = np.where(self._is_sub, drop[SUB][self._owner],
-                        drop[UPD][self._owner])
-        keep = ~gone
-        self._values = self._values[keep]
-        self._is_upper = self._is_upper[keep]
-        self._is_sub = self._is_sub[keep]
-        self._owner = self._owner[keep]
+        for d in range(self.dims):
+            gone = np.where(self._is_sub[d], drop[SUB][self._owner[d]],
+                            drop[UPD][self._owner[d]])
+            keep = ~gone
+            self._values[d] = self._values[d][keep]
+            self._is_upper[d] = self._is_upper[d][keep]
+            self._is_sub[d] = self._is_sub[d][keep]
+            self._owner[d] = self._owner[d][keep]
 
     def _insert_records(self, entries: List[Tuple[str, int, np.ndarray,
                                                   np.ndarray]]) -> None:
         if not entries:
             return
         b = len(entries)
-        vals = np.empty(2 * b, np.float32)
-        up = np.zeros(2 * b, bool)
-        sub = np.empty(2 * b, bool)
-        own = np.empty(2 * b, np.int32)
-        for i, (side, rid, lo, hi) in enumerate(entries):
-            vals[i], vals[b + i] = lo[0], hi[0]        # dim-0 endpoints
-            up[b + i] = True
-            sub[i] = sub[b + i] = side == SUB
-            own[i] = own[b + i] = rid
-        order = np.lexsort((up, vals))                  # O(b·log b) — delta only
-        vals, up, sub, own = vals[order], up[order], sub[order], own[order]
-        # Splice position per delta record: a *lower* goes before every
-        # stream record of equal value (side='left'), an *upper* after all
-        # of them (side='right') — preserving the lowers-before-uppers
-        # closed-interval tie-break without comparing composite keys.
-        pos = np.where(up, np.searchsorted(self._values, vals, side="right"),
-                       np.searchsorted(self._values, vals, side="left"))
-        dest = pos + np.arange(2 * b)        # pos is nondecreasing in order
-        total = self._values.shape[0] + 2 * b
-        old = np.ones(total, bool)
-        old[dest] = False
-        for name, delta in (("_values", vals), ("_is_upper", up),
-                            ("_is_sub", sub), ("_owner", own)):
-            merged = np.empty(total, delta.dtype)
-            merged[dest] = delta
-            merged[old] = getattr(self, name)
-            setattr(self, name, merged)
+        up0 = np.zeros(2 * b, bool)
+        up0[b:] = True
+        sub0 = np.empty(2 * b, bool)
+        own0 = np.empty(2 * b, np.int32)
+        for i, (side, rid, _lo, _hi) in enumerate(entries):
+            sub0[i] = sub0[b + i] = side == SUB
+            own0[i] = own0[b + i] = rid
+        for d in range(self.dims):
+            vals = np.empty(2 * b, np.float32)
+            for i, (_side, _rid, lo, hi) in enumerate(entries):
+                vals[i], vals[b + i] = lo[d], hi[d]
+            order = np.lexsort((up0, vals))            # O(b·log b) — delta only
+            vals, up, sub, own = vals[order], up0[order], sub0[order], own0[order]
+            # Splice position per delta record: a *lower* goes before every
+            # stream record of equal value (side='left'), an *upper* after
+            # all of them (side='right') — preserving the lowers-before-
+            # uppers closed-interval tie-break without composite keys.
+            pos = np.where(up,
+                           np.searchsorted(self._values[d], vals, side="right"),
+                           np.searchsorted(self._values[d], vals, side="left"))
+            dest = pos + np.arange(2 * b)    # pos is nondecreasing in order
+            total = self._values[d].shape[0] + 2 * b
+            old = np.ones(total, bool)
+            old[dest] = False
+            for name, delta in (("_values", vals), ("_is_upper", up),
+                                ("_is_sub", sub), ("_owner", own)):
+                store = getattr(self, name)
+                merged = np.empty(total, delta.dtype)
+                merged[dest] = delta
+                merged[old] = store[d]
+                store[d] = merged
 
     # -- rank tables + per-region match sets -------------------------------
-    def _prep_tables(self) -> _Prep:
-        if self._prep is not None:
-            return self._prep
-        sel_lo = ~self._is_upper
-        sel_s_lo = self._is_sub & sel_lo
-        sel_u_lo = ~self._is_sub & sel_lo
+    def _prep_tables(self, dim: int = 0) -> _Prep:
+        if self._prep[dim] is not None:
+            return self._prep[dim]
+        is_upper = self._is_upper[dim]
+        is_sub = self._is_sub[dim]
+        owner = self._owner[dim]
+        sel_lo = ~is_upper
+        sel_s_lo = is_sub & sel_lo
+        sel_u_lo = ~is_sub & sel_lo
         c_sub_lo = np.cumsum(sel_s_lo)       # host int64 — no wrap to fix
         c_upd_lo = np.cumsum(sel_u_lo)
         cap_s = self._live[SUB].shape[0]
@@ -313,33 +327,37 @@ class IncrementalIndex:
         a_end = np.zeros(cap_s, np.int64)
         b_start = np.zeros(cap_u, np.int64)
         b_end = np.zeros(cap_u, np.int64)
-        sel_s_up = self._is_sub & self._is_upper
-        sel_u_up = ~self._is_sub & self._is_upper
+        sel_s_up = is_sub & is_upper
+        sel_u_up = ~is_sub & is_upper
         # inclusive cumsum at a foreign-type position counts strictly-before
         # lowers — exactly rank_tables_from_cumsums' scatter, done once per
         # batch on the host stream instead of per jit call on device
-        a_start[self._owner[sel_s_lo]] = c_upd_lo[sel_s_lo]
-        a_end[self._owner[sel_s_up]] = c_upd_lo[sel_s_up]
-        b_start[self._owner[sel_u_lo]] = c_sub_lo[sel_u_lo]
-        b_end[self._owner[sel_u_up]] = c_sub_lo[sel_u_up]
-        self._prep = _Prep(
-            subs_by_lo=self._owner[sel_s_lo], upds_by_lo=self._owner[sel_u_lo],
+        a_start[owner[sel_s_lo]] = c_upd_lo[sel_s_lo]
+        a_end[owner[sel_s_up]] = c_upd_lo[sel_s_up]
+        b_start[owner[sel_u_lo]] = c_sub_lo[sel_u_lo]
+        b_end[owner[sel_u_up]] = c_sub_lo[sel_u_up]
+        self._prep[dim] = _Prep(
+            subs_by_lo=owner[sel_s_lo], upds_by_lo=owner[sel_u_lo],
             a_start=a_start, a_end=a_end, b_start=b_start, b_end=b_end,
             live_s=self.live_ids(SUB), live_u=self.live_ids(UPD))
-        return self._prep
+        return self._prep[dim]
 
-    def _filter_other_dims(self, side: str, rid: int,
-                           cand: np.ndarray) -> np.ndarray:
-        """Keep dim-0 candidates whose remaining projections also overlap."""
-        if self.dims == 1 or cand.size == 0:
-            return cand
-        other = UPD if side == SUB else SUB
-        q_lo, q_hi = self._lo[side][:, rid], self._hi[side][:, rid]
-        c_lo, c_hi = self._lo[other][:, cand], self._hi[other][:, cand]
-        keep = np.ones(cand.size, bool)
-        for d in range(1, self.dims):
-            keep &= (q_lo[d] <= c_hi[d]) & (c_lo[d] <= q_hi[d])
-        return cand[keep]
+    def _candidate_count(self, prep: _Prep) -> int:
+        """1-d match count of one dimension, read off its rank tables.
+
+        Class-A plus class-B range lengths over live ids sum to exactly
+        that projection's K — an O(n + m) selectivity probe, the
+        incremental analogue of :func:`repro.core.ddim.per_dimension_counts`.
+        """
+        return int(
+            (prep.a_end[prep.live_s] - prep.a_start[prep.live_s]).sum()
+            + (prep.b_end[prep.live_u] - prep.b_start[prep.live_u]).sum())
+
+    def select_dimension(self) -> int:
+        """The most selective candidate-generator dimension (DESIGN.md §8)."""
+        counts = [self._candidate_count(self._prep_tables(d))
+                  for d in range(self.dims)]
+        return min(range(self.dims), key=lambda d: counts[d])
 
     def _matches_of(self, side: str, rid: int,
                     lv_cache: Optional[dict] = None) -> Set[Tuple[int, int]]:
@@ -351,9 +369,10 @@ class IncrementalIndex:
         contains its lower rank) — and that union is exactly the
         closed-interval overlap set, a pure value comparison.  So the
         per-region query needs no position tables at all: one vectorized
-        ``lo <= q_hi ∧ hi >= q_lo`` over live counterparts, O(m) with a
-        tiny constant and — unlike the O(n+m) table rebuild — independent
-        of this side's size.  The full table form lives on in
+        ``lo <= q_hi ∧ hi >= q_lo`` over live counterparts *per dimension*
+        (the delta-rematch filter on the other dims), O(d·m) with a tiny
+        constant and — unlike the O(n+m) table rebuild — independent of
+        this side's size.  The full table form lives on in
         :meth:`all_pairs`, where the position-space partition is what
         makes whole-world emission O(K).  ``lv_cache`` lets apply_batch
         hoist the per-side live-id scans to once per phase."""
@@ -361,25 +380,32 @@ class IncrementalIndex:
         lv = lv_cache[other] if lv_cache is not None else self.live_ids(other)
         if lv.size == 0:
             return set()
-        q_lo, q_hi = self._lo[side][0, rid], self._hi[side][0, rid]
-        hit = (self._lo[other][0, lv] <= q_hi) & (self._hi[other][0, lv] >= q_lo)
-        cand = self._filter_other_dims(side, rid, lv[hit])
+        q_lo, q_hi = self._lo[side][:, rid], self._hi[side][:, rid]
+        hit = np.ones(lv.size, bool)
+        for d in range(self.dims):
+            hit &= (self._lo[other][d, lv] <= q_hi[d]) & \
+                   (self._hi[other][d, lv] >= q_lo[d])
+        cand = lv[hit]
         if side == SUB:
             return {(rid, int(j)) for j in cand}
         return {(int(i), rid) for i in cand}
 
     # -- full enumeration from the index (no re-sort) ----------------------
     def all_pairs(self) -> Set[Tuple[int, int]]:
-        """Every matching ``(sub_rid, upd_rid)`` — O(n + m + K) host pass.
+        """Every matching ``(sub_rid, upd_rid)`` — O(d·(n + m) + K_gen).
 
-        Class-A ranges of all live subs plus class-A ranges of all live
-        upds (each pair lands in exactly one) — the full rank-table
-        emission, reading the persistent stream instead of re-sorting.
-        Used as the index's own full-query path and cross-checked against
-        the stateless device sweep in the tests.
+        Candidates come from the most *selective* dimension's rank tables
+        (class-A ranges of all live subs plus class-A ranges of all live
+        upds — each 1-d pair lands in exactly one); the remaining
+        projections are filtered per candidate.  Reading the persistent
+        per-dim streams instead of re-sorting keeps the whole query
+        emission-bound: K_gen is the generator projection's match count,
+        min over dimensions.  Used as the index's own full-query path and
+        cross-checked against the stateless device sweep in the tests.
         """
-        prep = self._prep_tables()
         out: Set[Tuple[int, int]] = set()
+        gen = self.select_dimension() if self.dims > 1 else 0
+        prep = self._prep_tables(gen)
         ls, lu = prep.live_s, prep.live_u
         if ls.size == 0 or lu.size == 0:
             return out
@@ -395,7 +421,9 @@ class IncrementalIndex:
         jj = np.concatenate([jj, j2])
         if self.dims > 1 and ii.size:
             keep = np.ones(ii.size, bool)
-            for d in range(1, self.dims):
+            for d in range(self.dims):
+                if d == gen:
+                    continue
                 keep &= ((self._lo[SUB][d, ii] <= self._hi[UPD][d, jj]) &
                          (self._lo[UPD][d, jj] <= self._hi[SUB][d, ii]))
             ii, jj = ii[keep], jj[keep]

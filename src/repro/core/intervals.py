@@ -101,17 +101,59 @@ def make_clustered_workload(
     alpha: float,
     n_clusters: int = 16,
     length: float = 1.0e6,
+    d: int = 1,
 ) -> Tuple[Extents, Extents]:
-    """A skewed workload (hot spots) to stress load balance of the sweep."""
+    """A skewed workload (hot spots) to stress load balance of the sweep.
+
+    ``d > 1`` places the cluster centers in d-space (each extent is a small
+    d-cube around its center) — hot spots in *every* projection.
+    """
     total = n_sub + n_upd
     seg_len = alpha * length / total
     kc, kj = jax.random.split(key)
-    centers = jax.random.uniform(kc, (n_clusters,), minval=0.0, maxval=length)
+    shape = (total,) if d == 1 else (d, total)
+    centers = jax.random.uniform(kc, (n_clusters,) if d == 1 else (d, n_clusters),
+                                 minval=0.0, maxval=length)
     assign = jax.random.randint(kj, (total,), 0, n_clusters)
-    jitter = jax.random.normal(jax.random.fold_in(kj, 1), (total,)) * (length / (20 * n_clusters))
-    lo = jnp.clip(centers[assign] + jitter, 0.0, length - seg_len).astype(jnp.float32)
+    jitter = jax.random.normal(jax.random.fold_in(kj, 1), shape) * (length / (20 * n_clusters))
+    lo = jnp.clip(centers[..., assign] + jitter, 0.0, length - seg_len).astype(jnp.float32)
     hi = lo + jnp.float32(seg_len)
-    return (Extents(lo[:n_sub], hi[:n_sub]), Extents(lo[n_sub:], hi[n_sub:]))
+    return (Extents(lo[..., :n_sub], hi[..., :n_sub]),
+            Extents(lo[..., n_sub:], hi[..., n_sub:]))
+
+
+def make_tall_thin_workload(
+    key: jax.Array,
+    n_sub: int,
+    n_upd: int,
+    alpha: float = 1.0,
+    length: float = 1.0e6,
+    d: int = 2,
+    wide_dim: int = 0,
+) -> Tuple[Extents, Extents]:
+    """The adversarial d-dim workload: dim ``wide_dim`` is non-selective.
+
+    Every extent spans ≥ 98 % of the routing space along ``wide_dim`` (so
+    *all* n·m pairs overlap in that projection — the HLA tall/thin routing
+    shape), while the remaining dimensions carry the paper-§5 thin
+    segments of length αL/N.  A candidate generator hardcoded to the wide
+    dimension needs an O(n·m) buffer; the selective-dimension sweep and
+    the bit-matrix AND stay proportional to the true K (DESIGN.md §8).
+    """
+    if d < 2:
+        raise ValueError("tall-thin needs d >= 2 (one wide + one thin dim)")
+    total = n_sub + n_upd
+    seg_len = alpha * length / total
+    k_lo, k_wide = jax.random.split(key)
+    lo = jax.random.uniform(k_lo, (d, total), minval=0.0,
+                            maxval=length - seg_len, dtype=jnp.float32)
+    hi = lo + jnp.float32(seg_len)
+    wide_lo = jax.random.uniform(k_wide, (total,), minval=0.0,
+                                 maxval=0.02 * length, dtype=jnp.float32)
+    lo = lo.at[wide_dim].set(wide_lo)
+    hi = hi.at[wide_dim].set(wide_lo + jnp.float32(0.98 * length))
+    return (Extents(lo[:, :n_sub], hi[:, :n_sub]),
+            Extents(lo[:, n_sub:], hi[:, n_sub:]))
 
 
 def brute_force_count_numpy(subs: Extents, upds: Extents) -> int:

@@ -101,7 +101,6 @@ def document_extents(doc_ids: jax.Array, num_docs: int) -> Extents:
     ``num_docs`` extents [first_token, last_token] (empty docs: lo > hi so
     they match nothing).  Built with searchsorted — sort-based, O(S log D).
     """
-    seq = doc_ids.shape[0]
     ids = jnp.arange(num_docs, dtype=doc_ids.dtype)
     first = jnp.searchsorted(doc_ids, ids, side="left")
     last = jnp.searchsorted(doc_ids, ids, side="right") - 1

@@ -18,8 +18,6 @@ exploits for parallel ITM, minus the serial tree build.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax import lax

@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ddim as ddim_lib
 from repro.core import enumerate as enumerate_lib
 from repro.core import incremental as incr_lib
 from repro.core import sweep as sweep_lib
@@ -247,8 +248,10 @@ class DDMService:
     def match_count(self) -> int:
         """K — cached match state when warm, else the SBM counting sweep.
 
-        d > 1 uses the dim-0 sweep with pair-level filtering on the other
-        projections (paper §3), via the same path as :meth:`all_pairs`.
+        d > 1 probes every projection with the counting sweep and
+        enumerates candidates on the most *selective* dimension, filtering
+        the rest pairwise (DESIGN.md §8) — the candidate buffer scales with
+        the best projection's match count, not dim 0's.
         """
         self._flush(want_delta=False)
         if self._match_cache is not None:
@@ -261,23 +264,31 @@ class DDMService:
         upds = self._upds.compact(ul)
         if self.dims == 1:
             return int(sweep_lib.sbm_count(subs, upds))
-        k0 = int(sweep_lib.sbm_count(subs.dim(0), upds.dim(0)))
-        if k0 == 0:
+        gen, counts = ddim_lib.select_dimension(subs, upds)
+        if counts[gen] == 0:
             return 0
-        _, count = enumerate_lib.enumerate_matches_ddim(
-            subs, upds, max_pairs=_round_up_pow2(k0), method="sweep")
+        _, count = ddim_lib.enumerate_matches_ddim(
+            subs, upds, max_pairs=_round_up_pow2(counts[gen]),
+            method="sweep", generator_dim=gen)
         return int(count)   # scalar only — the pair buffer never leaves device
 
     def _sweep_pairs(self, subs: Extents, upds: Extents):
-        """(i, j) index pairs over compacted live extents via the sweep."""
+        """(i, j) index pairs over compacted live extents via the sweep.
+
+        d > 1: candidates come from the most selective projection
+        (:func:`repro.core.ddim.select_dimension`), so ``max_pairs`` is a
+        power-of-two bucket over min_d K_d rather than the dim-0 count.
+        """
         if self.dims == 1:
-            k = int(sweep_lib.sbm_count(subs, upds))
+            gen, k = 0, int(sweep_lib.sbm_count(subs, upds))
         else:
-            k = int(sweep_lib.sbm_count(subs.dim(0), upds.dim(0)))
+            gen, counts = ddim_lib.select_dimension(subs, upds)
+            k = counts[gen]
         if k == 0:
             return np.zeros(0, np.int64), np.zeros(0, np.int64), 0
-        pairs, count = enumerate_lib.enumerate_matches_ddim(
-            subs, upds, max_pairs=_round_up_pow2(k), method="sweep")
+        pairs, count = ddim_lib.enumerate_matches_ddim(
+            subs, upds, max_pairs=_round_up_pow2(k), method="sweep",
+            generator_dim=gen)
         arr = np.asarray(pairs)
         arr = arr[arr[:, 0] >= 0]
         return arr[:, 0], arr[:, 1], int(count)

@@ -27,7 +27,7 @@ inputs (ties, duplicates, zero-length intervals included) — see
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -163,6 +163,19 @@ def _saturate_from_lanes(a, b, c, d):
     return jnp.where(sat, jnp.int32(_INT32_MAX), low)
 
 
+def combine_lane_partials(a, b, c, d):
+    """Total from :func:`_lane_partial_sums` partials — THE one
+    implementation of the repo-wide overflow contract (exact int64 under
+    x64, saturating at the 2³¹−1 sentinel without).  Every engine that
+    reduces lane partials (counting sweep, sharded sweep, bit-matrix
+    popcounts) must route through here so the contract can never diverge.
+    """
+    if jax.config.read("jax_enable_x64"):
+        a, b, c, d = (v.astype(jnp.int64) for v in (a, b, c, d))
+        return (a << 32) + ((b + c) << 16) + d
+    return _saturate_from_lanes(a, b, c, d)
+
+
 @functools.partial(jax.jit, static_argnames=("num_segments", "scan_impl"))
 def _sbm_count_partials(subs: Extents, upds: Extents, *, num_segments: int,
                         scan_impl: str):
@@ -189,10 +202,7 @@ def sbm_count(subs: Extents, upds: Extents, *, num_segments: int = 8,
     """
     a, b, c, d = _sbm_count_partials(subs, upds, num_segments=num_segments,
                                      scan_impl=scan_impl)
-    if jax.config.read("jax_enable_x64"):
-        a, b, c, d = (v.astype(jnp.int64) for v in (a, b, c, d))
-        return (a << 32) + ((b + c) << 16) + d
-    return _saturate_from_lanes(a, b, c, d)
+    return combine_lane_partials(a, b, c, d)
 
 
 def sbm_count_exact(subs: Extents, upds: Extents, *, num_segments: int = 8,
@@ -366,10 +376,7 @@ def sbm_count_shard_body(sub_lo, sub_up, upd_lo, upd_up, *, axis_name: str):
 
     emit = _emission_counts(sub_lo, sub_up, upd_lo, upd_up, cumsum_fn)
     a, b, c, d = (lax.psum(v, axis_name) for v in _lane_partial_sums(emit))
-    if jax.config.read("jax_enable_x64"):
-        a, b, c, d = (v.astype(jnp.int64) for v in (a, b, c, d))
-        return (a << 32) + ((b + c) << 16) + d
-    return _saturate_from_lanes(a, b, c, d)
+    return combine_lane_partials(a, b, c, d)
 
 
 def sbm_count_sharded(subs: Extents, upds: Extents, mesh, axis_name: str):
@@ -379,7 +386,7 @@ def sbm_count_sharded(subs: Extents, upds: Extents, mesh, axis_name: str):
     device scans a contiguous segment of the sorted stream and the active-set
     carry crosses devices via the two-level scan (all_gather of partials).
     """
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from repro.compat import shard_map
 
     num_shards = mesh.shape[axis_name]
@@ -426,6 +433,29 @@ def sequential_sbm_count_numpy(subs: Extents, upds: Extents) -> int:
                 upd_active -= 1
                 k += sub_active
     return k
+
+
+def sequential_sbm_pairs_numpy_ddim(subs: Extents, upds: Extents,
+                                    sweep_dim: int = 0) -> set:
+    """Algorithm 4 extended to d dims: 1-d sweep on ``sweep_dim``, then the
+    paper-§3 projection filter on every other dimension — the host-side
+    reference the selective-dimension and bit-matrix engines are
+    property-tested against (any ``sweep_dim`` yields the same set).
+    """
+    if subs.ndim_space == 1:
+        return sequential_sbm_pairs_numpy(subs, upds)
+    cand = sequential_sbm_pairs_numpy(subs.dim(sweep_dim),
+                                      upds.dim(sweep_dim))
+    s_lo = np.asarray(subs.lo)
+    s_hi = np.asarray(subs.hi)
+    u_lo = np.asarray(upds.lo)
+    u_hi = np.asarray(upds.hi)
+    out = set()
+    for i, j in cand:
+        if all((s_lo[d, i] <= u_hi[d, j]) and (u_lo[d, j] <= s_hi[d, i])
+               for d in range(subs.ndim_space) if d != sweep_dim):
+            out.add((i, j))
+    return out
 
 
 def sequential_sbm_pairs_numpy(subs: Extents, upds: Extents) -> set:

@@ -10,14 +10,63 @@ attention path consumes (document extents via ``core.matrix.document_extents``
 The token process is a noisy affine bigram chain: x_{t+1} = (a·x_t + c) mod V
 with probability ``p_signal``, uniform otherwise — learnable, so training
 curves actually go down (used by examples/quickstart.py).
+
+Also hosted here: the **DDM workload registry** (:func:`ddm_workload`) —
+the named d-dimensional region-set generators the matching benchmarks and
+property tests draw from (uniform / clustered / tall-thin, DESIGN.md §8).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.intervals import (
+    Extents,
+    make_clustered_workload,
+    make_tall_thin_workload,
+    make_uniform_workload,
+)
+
+
+# ---------------------------------------------------------------------------
+# DDM workload registry (the benchmark/test axis — configs.ddm_paper names it)
+# ---------------------------------------------------------------------------
+
+DDM_WORKLOADS = ("uniform", "clustered", "tall_thin")
+
+
+def ddm_workload(
+    name: str,
+    key: jax.Array,
+    n_sub: int,
+    n_upd: int,
+    *,
+    alpha: float,
+    d: int = 1,
+    length: float = 1.0e6,
+) -> Tuple[Extents, Extents]:
+    """Named d-dim DDM region-set generator (one axis of the bench matrix).
+
+    ``uniform`` and ``clustered`` follow the paper §5 (identical side
+    αL/N, uniform or 16-hot-spot placement, d-cubes for d > 1);
+    ``tall_thin`` is the adversarial shape whose dim 0 matches every pair
+    (requires d ≥ 2 — see
+    :func:`repro.core.intervals.make_tall_thin_workload`).
+    """
+    if name == "uniform":
+        return make_uniform_workload(key, n_sub, n_upd, alpha=alpha,
+                                     length=length, d=d)
+    if name == "clustered":
+        return make_clustered_workload(key, n_sub, n_upd, alpha=alpha,
+                                       length=length, d=d)
+    if name == "tall_thin":
+        return make_tall_thin_workload(key, n_sub, n_upd, alpha=alpha,
+                                       length=length, d=d)
+    raise ValueError(f"unknown DDM workload {name!r} "
+                     f"(choose from {DDM_WORKLOADS})")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the perf-critical layers.
 
 * ``sbm_sweep`` — the paper's parallel sweep (counting + bitmask delta sets).
+* ``bitmatch`` — the d-dim bit-matrix AND (blockwise pack/AND/popcount in
+  VMEM, DESIGN.md §8).
 * ``flash_attention`` — interest-managed block-sparse FlashAttention whose
   block schedule is produced by the DDM matching engine.
 
@@ -13,6 +15,8 @@ from repro.kernels.ops import (
     flash_attention,
     build_block_structure,
 )
+from repro.kernels.bitmatch import bitmatrix_pallas, sbm_bitmatrix_kernel
 
 __all__ = ["sbm_count_kernel", "sbm_delta_bitmasks", "sbm_enumerate_kernel",
+           "bitmatrix_pallas", "sbm_bitmatrix_kernel",
            "flash_attention", "build_block_structure"]

@@ -1,0 +1,159 @@
+"""Pallas TPU kernel for the d-dim bit-matrix AND (DESIGN.md §8).
+
+The journal version of the source paper (arXiv:1911.03456) combines
+per-dimension match bit-vectors with bitwise AND.  On TPU that maps onto a
+grid over *subscription row blocks*: each grid step holds one ``(BLOCK_N,)``
+slice of subscription extents (all d dimensions) and the full update set in
+VMEM, evaluates the d closed-interval overlap masks on the VPU, AND-reduces
+them, packs each row into ``ceil(m/32)`` ``uint32`` words (a weighted
+lane-sum — no bit loops), and popcounts the words for the per-row match
+counts.  The boolean n × m mask never exists in HBM: only the 32×-smaller
+packed words and the per-row counts leave the kernel.
+
+VMEM budget per grid step: the ``(BLOCK_N, m)`` comparison mask dominates
+at 4·BLOCK_N·m bytes of int32 lanes, so with the ~16 MB/core budget the
+product BLOCK_N·m must stay around 10⁶ — the default ``block_n = 256``
+covers m up to ~8k updates; shrink ``block_n`` proportionally for larger
+update sets (``block_n = 32`` reaches m ≈ 65k).  The update axis is
+padded to a lane multiple (128) with inert ``[+inf, -inf]`` sentinels
+whose bits are always zero.
+
+The pure-jnp oracle is :func:`repro.core.ddim.bitmatrix_words`; agreement
+(words, counts, and the emitted pair set) is pinned in
+``tests/test_kernels_bitmatch.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core import ddim as ddim_lib
+from repro.core import prefix as prefix_lib
+from repro.core.intervals import Extents
+
+
+def _bitmatch_kernel(s_lo_ref, s_hi_ref, u_lo_ref, u_hi_ref,
+                     words_ref, counts_ref):
+    """One grid step = one subscription row block against every update.
+
+    s_lo/s_hi: (d, BLOCK_N) f32; u_lo/u_hi: (d, M) f32 (lane-padded).
+    words_ref: (BLOCK_N, M // 32) uint32; counts_ref: (BLOCK_N, 1) int32.
+    """
+    d = s_lo_ref.shape[0]
+    m = u_lo_ref.shape[1]
+    mask = None
+    for dd in range(d):  # static unroll — d is a compile-time constant
+        hit = (s_lo_ref[dd, :][:, None] <= u_hi_ref[dd, :][None, :]) & (
+            u_lo_ref[dd, :][None, :] <= s_hi_ref[dd, :][:, None]
+        )
+        mask = hit if mask is None else mask & hit
+    # pack in-VMEM with the canonical bit layout (m is lane-padded to a
+    # multiple of 128, so pack_bits' pad branch is statically dead)
+    assert m % 32 == 0
+    words = prefix_lib.pack_bits(mask)
+    words_ref[...] = words
+    counts_ref[...] = jnp.sum(
+        lax.population_count(words).astype(jnp.int32), axis=-1, keepdims=True
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "interpret")
+)
+def _bitmatrix_pallas_jit(s_lo, s_hi, u_lo, u_hi, *, block_n: int,
+                          interpret: bool):
+    d, n_pad = s_lo.shape
+    m_pad = u_lo.shape[1]
+    num_blocks = n_pad // block_n
+    num_words = m_pad // 32
+    ext_spec = pl.BlockSpec((d, block_n), lambda i: (0, i))
+    upd_spec = pl.BlockSpec((d, m_pad), lambda i: (0, 0))
+    words, counts = pl.pallas_call(
+        _bitmatch_kernel,
+        grid=(num_blocks,),
+        in_specs=[ext_spec, ext_spec, upd_spec, upd_spec],
+        out_specs=[
+            pl.BlockSpec((block_n, num_words), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, num_words), jnp.uint32),
+            jax.ShapeDtypeStruct((n_pad, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(s_lo, s_hi, u_lo, u_hi)
+    return words, counts[:, 0]
+
+
+def bitmatrix_pallas(
+    subs: Extents,
+    upds: Extents,
+    *,
+    block_n: int = 256,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(words, row_counts, k_total) via the blockwise VMEM pack/AND kernel.
+
+    ``words`` is ``(n, ceil(m/32))`` uint32 — bit-identical to
+    :func:`repro.core.ddim.bitmatrix_words` (padding words sliced off);
+    ``row_counts`` is the per-subscription d-dim match count (int32 —
+    exact, each row is bounded by m); ``k_total`` is their lane-safe sum
+    (``repro.core.ddim._popcount_total``): exact int64 under x64,
+    saturating at 2³¹−1 without — never a silent wrap.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, m = subs.size, upds.size
+    num_words = max(-(-m // 32), 1)
+    if n == 0 or m == 0:
+        return (
+            jnp.zeros((n, num_words), jnp.uint32),
+            jnp.zeros((n,), jnp.int32),
+            jnp.zeros((), ddim_lib._count_dtype()),
+        )
+    s_lo, s_hi = ddim_lib._dim_rows(subs)
+    u_lo, u_hi = ddim_lib._dim_rows(upds)
+    block_n = min(block_n, max(8, n))
+    s_lo, s_hi = ddim_lib._pad_axis(s_lo, s_hi, block_n)
+    u_lo, u_hi = ddim_lib._pad_axis(u_lo, u_hi, 128)
+    words, counts = _bitmatrix_pallas_jit(
+        s_lo, s_hi, u_lo, u_hi, block_n=block_n, interpret=interpret
+    )
+    words = words[:n, :num_words]
+    counts = counts[:n]
+    # total from the kernel's own row popcounts (n terms, lane-safe) —
+    # no second pass over the n x ceil(m/32) word matrix
+    return words, counts, ddim_lib._lane_safe_sum(counts)
+
+
+def sbm_bitmatrix_kernel(
+    subs: Extents,
+    upds: Extents,
+    *,
+    max_pairs: int,
+    block_n: int = 256,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """d-dim (pairs, count) with the kernel-packed bit matrix as the engine.
+
+    Same contract as :func:`repro.core.ddim.bitmatrix_enumerate` —
+    ``max_pairs`` bounds only the final d-dim K; pairs emit in row-major
+    order, padded with (-1, -1); count exact past the buffer.
+    """
+    n, m = subs.size, upds.size
+    if n == 0 or m == 0:
+        return (
+            jnp.full((max_pairs, 2), -1, jnp.int32),
+            jnp.zeros((), ddim_lib._count_dtype()),
+        )
+    words, _counts, k_total = bitmatrix_pallas(
+        subs, upds, block_n=block_n, interpret=interpret
+    )
+    return ddim_lib.pairs_from_bitmatrix(
+        words, m=m, max_pairs=max_pairs, count=k_total
+    )

@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import matrix as matrix_lib
 from repro.core import prefix as prefix_lib
 from repro.core.intervals import Extents
 from repro.core.sweep import encode_endpoints, _indicator_deltas, _pad_stream

@@ -14,13 +14,11 @@ Usage:
 """
 import argparse
 import json
-import re
 import time
 import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
 from repro.launch import steps as steps_lib

@@ -3,8 +3,6 @@ dryrun.py.  Everything here is allocation-free: the dry-run lowers against
 ShapeDtypeStructs that carry NamedShardings."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,10 +11,8 @@ devices exist (elastic), model-parallel size via --tp.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduce_config
 from repro.data.synthetic import SyntheticConfig, SyntheticLM

@@ -8,7 +8,7 @@ spec derivation (→ parallel.sharding), checkpoint naming and the dry-run's
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

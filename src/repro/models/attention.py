@@ -14,7 +14,6 @@ softmax-merge collective (flash-decoding across chips).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax

@@ -1,7 +1,7 @@
 """Shared layers: RMSNorm, RoPE, embeddings, projections."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

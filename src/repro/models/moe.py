@@ -122,7 +122,6 @@ def _moe_apply_shard_map(params, x, bin_token, bin_gate, cfg, sharder,
     mesh = sharder.mesh
     dt = cfg.dtype
     b, s, d = x.shape
-    e = cfg.num_experts
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     bspec = P(batch_axes if batch_axes else None)
 

@@ -12,8 +12,7 @@ Mamba states) is stacked the same way and threaded through the scan.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ on an emulated mesh, including window edges and ring tie-breaks).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

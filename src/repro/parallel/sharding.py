@@ -23,7 +23,6 @@ import dataclasses
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[None, str, Tuple[str, ...]]

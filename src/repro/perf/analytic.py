@@ -15,11 +15,10 @@ are ignored (<2% at these widths; the validation tolerance covers them).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 from repro.configs import ShapeDef
-from repro.models.api import LayerSpec, ModelConfig
+from repro.models.api import ModelConfig
 from repro.models.mamba import CHUNK
 from repro.models.moe import _capacity
 

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

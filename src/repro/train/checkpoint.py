@@ -17,7 +17,6 @@ Fault-tolerance contract:
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import queue

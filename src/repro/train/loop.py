@@ -24,9 +24,7 @@ Large-scale posture (designed for 1000+ nodes, exercised here at CPU scale):
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
-from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional
 
 import jax

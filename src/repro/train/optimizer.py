@@ -31,7 +31,8 @@ class AdamW:
     moment_dtype: Any = jnp.bfloat16
 
     def init(self, params) -> AdamState:
-        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        def zeros(p):
+            return jnp.zeros(p.shape, self.moment_dtype)
         return AdamState(jnp.zeros((), jnp.int32),
                          jax.tree.map(zeros, params),
                          jax.tree.map(zeros, params))

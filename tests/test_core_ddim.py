@@ -1,0 +1,254 @@
+"""d-dimensional matching (DESIGN.md §8): the selective-dimension sweep and
+the bit-matrix AND agree with the d-dim brute force and the sequential
+Algorithm-4 sweep extended to d dims — including dimension-count ties,
+zero-width extents, and the tall-thin adversarial workload where dim 0
+matches every pair."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import (
+    Extents,
+    bitmatrix_count,
+    bitmatrix_enumerate,
+    bitmatrix_words,
+    brute_force_pairs_numpy,
+    enumerate_matches_ddim,
+    make_tall_thin_workload,
+    per_dimension_counts,
+    select_dimension,
+    sequential_sbm_pairs_numpy_ddim,
+)
+from repro.core.enumerate import round_up_pow2
+from repro.data.synthetic import DDM_WORKLOADS, ddm_workload
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(lo_s, hi_s, lo_u, hi_u):
+    subs = Extents(jnp.asarray(lo_s, jnp.float32), jnp.asarray(hi_s, jnp.float32))
+    upds = Extents(jnp.asarray(lo_u, jnp.float32), jnp.asarray(hi_u, jnp.float32))
+    return subs, upds
+
+
+def _pset(pairs):
+    return {(int(i), int(j)) for i, j in np.asarray(pairs) if i >= 0}
+
+
+def _check_all_engines(subs, upds, *, gen_dims=(None,)):
+    """Every d-dim engine returns exactly the brute-force pair set, for the
+    auto-selected generator dimension and any pinned one."""
+    want = brute_force_pairs_numpy(subs, upds)
+    for sweep_dim in range(subs.ndim_space):
+        assert sequential_sbm_pairs_numpy_ddim(subs, upds, sweep_dim) == want
+    counts = per_dimension_counts(subs, upds)
+    cap = round_up_pow2(max(max(counts), 1))
+    for gen in gen_dims:
+        pairs, count = enumerate_matches_ddim(subs, upds, max_pairs=cap,
+                                              method="sweep",
+                                              generator_dim=gen)
+        assert int(count) == len(want), (gen, int(count), len(want))
+        assert _pset(pairs) == want, gen
+    # bit-matrix: buffer sized by the FINAL K only
+    assert int(bitmatrix_count(subs, upds)) == len(want)
+    pairs, count = bitmatrix_enumerate(subs, upds,
+                                       max_pairs=max(len(want), 1))
+    assert int(count) == len(want) and _pset(pairs) == want
+    # blocked oracle path through the same dispatcher
+    pairs, count = enumerate_matches_ddim(subs, upds, max_pairs=cap,
+                                          method="blocked", block=32)
+    assert int(count) == len(want) and _pset(pairs) == want
+    return want
+
+
+# ---------------------------------------------------------------------------
+# dimension selection
+# ---------------------------------------------------------------------------
+
+def test_selects_most_selective_dimension():
+    # dim 0: everything overlaps (4 pairs); dim 1: disjoint (1 pair)
+    subs, upds = _mk([[0.0, 0.0], [10.0, 30.0]],
+                     [[9.0, 9.0], [19.0, 39.0]],
+                     [[1.0, 1.0], [10.0, 50.0]],
+                     [[8.0, 8.0], [15.0, 60.0]])
+    gen, counts = select_dimension(subs, upds)
+    assert counts == (4, 1) and gen == 1
+    _check_all_engines(subs, upds, gen_dims=(None, 0, 1))
+
+
+def test_dimension_tie_breaks_deterministically():
+    # both dims identical → equal counts; ties must pick dim 0
+    subs, upds = _mk([[0.0, 5.0], [0.0, 5.0]], [[2.0, 7.0], [2.0, 7.0]],
+                     [[1.0, 6.0], [1.0, 6.0]], [[3.0, 9.0], [3.0, 9.0]])
+    gen, counts = select_dimension(subs, upds)
+    assert counts[0] == counts[1] and gen == 0
+    _check_all_engines(subs, upds, gen_dims=(None, 0, 1))
+
+
+def test_zero_width_extents_all_dims():
+    # points on integer grid: closed semantics must match in every engine
+    subs, upds = _mk([[2.0, 4.0], [1.0, 1.0]], [[2.0, 4.0], [1.0, 1.0]],
+                     [[2.0, 3.0], [1.0, 2.0]], [[2.0, 3.0], [1.0, 2.0]])
+    want = _check_all_engines(subs, upds, gen_dims=(None, 0, 1))
+    assert want == {(0, 0)}
+
+
+def test_integer_grid_ties_3d():
+    rng = np.random.RandomState(11)
+    n, m, d = 23, 31, 3
+    lo_s = rng.randint(0, 8, (d, n)).astype(np.float32)
+    hi_s = lo_s + rng.randint(0, 4, (d, n))
+    lo_u = rng.randint(0, 8, (d, m)).astype(np.float32)
+    hi_u = lo_u + rng.randint(0, 4, (d, m))
+    _check_all_engines(*_mk(lo_s, hi_s, lo_u, hi_u), gen_dims=(None, 0, 2))
+
+
+def test_empty_sides():
+    subs = Extents(jnp.zeros((2, 0)), jnp.zeros((2, 0)))
+    upds, _ = _mk([[1.0], [1.0]], [[2.0], [2.0]], [[0.0], [0.0]],
+                  [[1.0], [1.0]])
+    pairs, count = bitmatrix_enumerate(subs, upds, max_pairs=4)
+    assert int(count) == 0 and _pset(pairs) == set()
+    pairs, count = enumerate_matches_ddim(subs, upds, max_pairs=4)
+    assert int(count) == 0 and _pset(pairs) == set()
+
+
+# ---------------------------------------------------------------------------
+# the tall-thin adversary (acceptance criterion: max_pairs ~ K, not n·m)
+# ---------------------------------------------------------------------------
+
+def test_tall_thin_buffer_proportional_to_final_k():
+    n = m = 64
+    subs, upds = make_tall_thin_workload(jax.random.PRNGKey(3), n, m,
+                                         alpha=8.0, d=2, length=1000.0)
+    want = brute_force_pairs_numpy(subs, upds)
+    gen, counts = select_dimension(subs, upds)
+    assert counts[0] == n * m          # dim 0 is non-selective by design
+    assert gen == 1 and counts[1] < n * m // 4
+    # the selective path completes with a buffer sized by the generator
+    # dimension's count — far below the dim-0 candidate count
+    cap = round_up_pow2(counts[gen])
+    assert cap < n * m
+    pairs, count = enumerate_matches_ddim(subs, upds, max_pairs=cap)
+    assert int(count) == len(want) and _pset(pairs) == want
+    # the bit-matrix path with a buffer of exactly K
+    pairs, count = bitmatrix_enumerate(subs, upds,
+                                       max_pairs=max(len(want), 1))
+    assert int(count) == len(want) and _pset(pairs) == want
+
+
+@pytest.mark.parametrize("wide_dim", [0, 1, 2])
+def test_tall_thin_any_wide_dimension(wide_dim):
+    subs, upds = make_tall_thin_workload(jax.random.PRNGKey(4), 40, 40,
+                                         alpha=6.0, d=3, length=1000.0,
+                                         wide_dim=wide_dim)
+    gen, counts = select_dimension(subs, upds)
+    assert counts[wide_dim] == 40 * 40 and gen != wide_dim
+    _check_all_engines(subs, upds, gen_dims=(None, wide_dim))
+
+
+# ---------------------------------------------------------------------------
+# workload registry sweep (uniform / clustered / tall_thin × d)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", DDM_WORKLOADS)
+@pytest.mark.parametrize("d", [2, 3])
+def test_registry_workloads_all_engines(name, d):
+    subs, upds = ddm_workload(name, jax.random.PRNGKey(7 * d), 60, 70,
+                              alpha=3.0, d=d, length=1000.0)
+    _check_all_engines(subs, upds)
+
+
+def test_registry_rejects_unknown_and_1d_tall_thin():
+    with pytest.raises(ValueError):
+        ddm_workload("nope", jax.random.PRNGKey(0), 4, 4, alpha=1.0)
+    with pytest.raises(ValueError):
+        ddm_workload("tall_thin", jax.random.PRNGKey(0), 4, 4, alpha=1.0,
+                     d=1)
+
+
+# ---------------------------------------------------------------------------
+# overflow contract and packed-word layout
+# ---------------------------------------------------------------------------
+
+def test_generator_overflow_returns_needed_capacity():
+    """If the generator candidates overflow max_pairs, the returned count
+    is the generator's exact candidate count (> max_pairs) — the standard
+    check-and-retry loop then sizes a buffer that yields the exact K."""
+    subs, upds = make_tall_thin_workload(jax.random.PRNGKey(12), 32, 32,
+                                         alpha=12.0, d=2, length=1000.0)
+    want = brute_force_pairs_numpy(subs, upds)
+    gen, counts = select_dimension(subs, upds)
+    short = max(counts[gen] // 4, 1)
+    assert short < counts[gen]
+    pairs, count = enumerate_matches_ddim(subs, upds, max_pairs=short)
+    assert int(count) == counts[gen] > short     # overflow surfaced
+    assert _pset(pairs) <= want                  # partial but genuine
+    pairs, count = enumerate_matches_ddim(subs, upds, max_pairs=int(count))
+    assert int(count) == len(want) and _pset(pairs) == want  # retry exact
+
+
+def test_bitmatrix_overflow_still_counts():
+    subs, upds = _mk([[0.0] * 4, [0.0] * 4], [[1.0] * 4, [1.0] * 4],
+                     [[0.5] * 4, [0.5] * 4], [[2.0] * 4, [2.0] * 4])
+    want = brute_force_pairs_numpy(subs, upds)
+    assert len(want) == 16
+    pairs, count = bitmatrix_enumerate(subs, upds, max_pairs=5)
+    assert int(count) == 16            # exact K despite the short buffer
+    got = _pset(pairs)
+    assert len(got) == 5 and got <= want
+
+
+def test_bitmatrix_words_match_unpacked_mask():
+    rng = np.random.RandomState(2)
+    n, m = 19, 70                      # m not a multiple of 32
+    lo_s = rng.randint(0, 10, (2, n)).astype(np.float32)
+    hi_s = lo_s + rng.randint(0, 5, (2, n))
+    lo_u = rng.randint(0, 10, (2, m)).astype(np.float32)
+    hi_u = lo_u + rng.randint(0, 5, (2, m))
+    subs, upds = _mk(lo_s, hi_s, lo_u, hi_u)
+    words = np.asarray(bitmatrix_words(subs, upds))
+    assert words.shape == (n, -(-m // 32))
+    want = brute_force_pairs_numpy(subs, upds)
+    got = {(i, j) for i in range(n) for j in range(m)
+           if (words[i, j // 32] >> (j % 32)) & 1}
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property sweep (bare-env fallback: the seeded tests above)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def rect_sets(draw):
+        d = draw(st.integers(2, 3))
+        n = draw(st.integers(1, 12))
+        m = draw(st.integers(1, 12))
+
+        def mk(count):
+            lo = [[draw(st.integers(0, 12)) for _ in range(count)]
+                  for _ in range(d)]
+            hi = [[lo[dd][i] + draw(st.integers(0, 6)) for i in range(count)]
+                  for dd in range(d)]
+            return lo, hi
+
+        ls, hs = mk(n)
+        lu, hu = mk(m)
+        return ls, hs, lu, hu
+
+    @given(rect_sets())
+    @settings(max_examples=30, deadline=None)
+    def test_property_ddim_engines_equal_sequential_reference(data):
+        subs, upds = _mk(*data)
+        want = sequential_sbm_pairs_numpy_ddim(subs, upds)
+        assert want == brute_force_pairs_numpy(subs, upds)
+        counts = per_dimension_counts(subs, upds)
+        cap = round_up_pow2(max(max(counts), 1))
+        pairs, count = enumerate_matches_ddim(subs, upds, max_pairs=cap)
+        assert int(count) == len(want) and _pset(pairs) == want
+        pairs, count = bitmatrix_enumerate(subs, upds,
+                                           max_pairs=max(len(want), 1))
+        assert int(count) == len(want) and _pset(pairs) == want

@@ -56,6 +56,18 @@ _SCRIPT = textwrap.dedent("""
     assert int(cnt) == len(want_pairs), (int(cnt), len(want_pairs))
     assert got_pairs == want_pairs
 
+    # d-dim bit-matrix sharded over subscription rows (n not a shard
+    # multiple -> inert-row padding): words and count must equal the
+    # single-device packed matrix and the brute-force K
+    from repro.core import bitmatrix_sharded, bitmatrix_words, make_tall_thin_workload
+    subs2, upds2 = make_tall_thin_workload(jax.random.PRNGKey(7), 101, 90,
+                                           alpha=8.0, d=2, length=1000.0)
+    words, cnt2 = bitmatrix_sharded(subs2, upds2, mesh, "p")
+    np.testing.assert_array_equal(np.asarray(words),
+                                  np.asarray(bitmatrix_words(subs2, upds2)))
+    from repro.core import brute_force_pairs_numpy as bf_pairs
+    assert int(cnt2) == len(bf_pairs(subs2, upds2)), int(cnt2)
+
     # K >= 2^31 across shards (duplicated extents): without x64 the count
     # must pin at the sentinel and the buffer must blank, never mis-stitch
     n = m = 1 << 16
