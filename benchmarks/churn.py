@@ -50,6 +50,20 @@ def _build_service(maker, n_each: int, alpha: float, seed: int) -> DDMService:
     return svc
 
 
+def _build_service_bulk(maker, n_each: int, alpha: float,
+                        seed: int) -> DDMService:
+    """Register via the bulk API from a deliberately tiny initial capacity:
+    elastic table growth (no capacity RuntimeError at any scale) is part
+    of what the bulk axis measures."""
+    subs, upds = maker(jax.random.PRNGKey(seed), n_each, n_each, alpha=alpha)
+    svc = DDMService(dims=1, capacity=16)
+    svc.register_subscriptions(np.asarray(subs.lo), np.asarray(subs.hi))
+    svc.register_updates(np.asarray(upds.lo), np.asarray(upds.hi))
+    assert int(svc._subs.live.sum()) == n_each
+    assert int(svc._upds.live.sum()) == n_each
+    return svc
+
+
 def _random_move(svc: DDMService, rng, length=1.0e6, seg=10.0):
     """Move one random live update region to a fresh uniform spot."""
     ids = svc._upds.live_ids()
@@ -117,6 +131,73 @@ def move_fraction_sweep(rows: List[str], n_each: int, reps: int) -> None:
             rows.append(f"churn_delta_{tag}_f{f},{t*1e6:.1f},b={b}")
 
 
+def bulk_sweep(rows: List[str], n_each: int, bulk_sizes, reps: int) -> None:
+    """The bulk-churn axis: b-region move batches through the bulk API.
+
+    For each b, one flush is timed with the stacked vectorized rematch
+    (``delta_impl="vector"``: dense mask / fused jit / sort-based by b·m)
+    and one with the pre-vectorization per-region loop — the speedup row
+    is the tentpole acceptance number.  Per-rep minimum, like
+    :func:`single_move`: these rows feed the CI bench gate.
+    """
+    seg = ALPHA * 1.0e6 / (2 * n_each)
+    svc = _build_service_bulk(make_uniform_workload, n_each, ALPHA, seed=7)
+    svc.all_pairs()                       # warm cache + jit
+    for b in bulk_sizes:
+        times = {}
+        for impl in ("vector", "loop"):
+            svc._index.delta_impl = impl
+            rng = np.random.RandomState(1000 + b)
+            t = float("inf")
+            for _ in range(reps):
+                rids = rng.choice(svc._upds.live_ids(), size=b, replace=False)
+                lo = rng.uniform(0, 1.0e6 - seg, b).astype(np.float32)
+                svc.move_updates(rids, lo, lo + np.float32(seg))
+                t0 = time.perf_counter()
+                svc.flush()
+                t = min(t, time.perf_counter() - t0)
+            times[impl] = t
+            rows.append(f"churn_bulk_{impl}_b{b}_n{n_each},{t*1e6:.1f},b={b}")
+        rows.append(f"churn_bulk_speedup_b{b}_n{n_each},"
+                    f"{times['loop']/times['vector']:.1f},vector_vs_loop_x")
+    svc._index.delta_impl = "vector"
+
+
+def bulk_smoke(rows: List[str]) -> None:
+    """CI bulk guard: vector and loop deltas must be IDENTICAL on the same
+    batch (twin services, same seed), and equal to the stateless-sweep
+    set difference; the pairs= rows gate engine behavior in CI."""
+    twins = {impl: _build_service_bulk(make_uniform_workload, N_SMOKE, 10.0,
+                                       seed=7)
+             for impl in ("vector", "loop")}
+    for impl, svc in twins.items():
+        svc._index.delta_impl = impl
+        svc.all_pairs()
+    seg = 10.0 * 1.0e6 / (2 * N_SMOKE)
+    for b in (1, 16, 128):
+        rng = np.random.RandomState(1000 + b)
+        rids = rng.choice(twins["vector"]._upds.live_ids(), size=b,
+                          replace=False)
+        lo = rng.uniform(0, 1.0e6 - seg, b).astype(np.float32)
+        deltas = {}
+        for impl, svc in twins.items():
+            before = svc.all_pairs()
+            svc.move_updates(rids, lo, lo + np.float32(seg))
+            deltas[impl] = svc.flush()
+            after = svc.all_pairs()
+            assert deltas[impl].added == after - before, (impl, b)
+            assert deltas[impl].removed == before - after, (impl, b)
+            svc.invalidate_cache()
+            assert svc.all_pairs() == after, \
+                f"{impl} b={b}: delta cache drifted from sweep rebuild"
+        assert deltas["vector"] == deltas["loop"], \
+            f"b={b}: vectorized delta != per-region loop delta"
+        d = deltas["vector"]
+        rows.append(f"churn_bulk_smoke_b{b},0,"
+                    f"pairs={len(d.added) + len(d.removed)}")
+    bulk_sweep(rows, N_SMOKE, bulk_sizes=(1, 16, 128), reps=3)
+
+
 def smoke(rows: List[str]) -> None:
     """CI smoke: tiny N, every entry point, delta == rebuild asserted."""
     svc = _build_service(make_uniform_workload, N_SMOKE, 10.0, seed=0)
@@ -163,9 +244,11 @@ def smoke(rows: List[str]) -> None:
     rows.append(f"churn_smoke_d2_talln{n2},0,pairs={len(got2)}")
 
 
-def run(rows: List[str]) -> None:
+def run(rows: List[str], bulk: bool = False) -> None:
     single_move(rows, N_FULL, reps=3)
     move_fraction_sweep(rows, N_FULL, reps=2)
+    if bulk:
+        bulk_sweep(rows, N_FULL, bulk_sizes=(1, 100, 10_000), reps=2)
 
 
 if __name__ == "__main__":
@@ -173,12 +256,20 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-N CI guard (asserts delta == rebuild)")
+    ap.add_argument("--bulk", action="store_true",
+                    help="add the bulk-batch axis: b-region move batches, "
+                         "vectorized stacked rematch vs per-region loop")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (the CI bench gate input)")
     args = ap.parse_args()
     rows: List[str] = []
     print("name,us_per_call,derived")
-    (smoke if args.smoke else run)(rows)
+    if args.smoke:
+        smoke(rows)
+        if args.bulk:
+            bulk_smoke(rows)
+    else:
+        run(rows, bulk=args.bulk)
     for r in rows:
         print(r, flush=True)
     if args.json:

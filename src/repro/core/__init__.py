@@ -44,7 +44,7 @@ from repro.core.rank import (
     per_upd_match_counts,
 )
 from repro.core.brute_force import bf_count, bf_count_sharded
-from repro.core.grid import grid_count
+from repro.core.grid import GridOverflowError, grid_count
 from repro.core.enumerate import (
     enumerate_matches,
     enumerate_matches_sweep_numpy,
@@ -82,6 +82,7 @@ __all__ = [
     "sequential_sbm_pairs_numpy_ddim",
     "rank_count", "rank_count_sharded", "per_sub_match_counts",
     "per_upd_match_counts", "bf_count", "bf_count_sharded", "grid_count",
+    "GridOverflowError",
     "enumerate_matches", "enumerate_matches_ddim", "enumerate_matches_sweep_numpy",
     "sbm_enumerate", "sbm_enumerate_sharded",
     "bitmatrix_count", "bitmatrix_enumerate", "bitmatrix_sharded",

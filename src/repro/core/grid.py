@@ -55,15 +55,38 @@ def _bin_extents(lo, hi, num_cells: int, cell_width: float, cap: int):
     return buckets[:num_cells], overflow
 
 
-@functools.partial(jax.jit, static_argnames=("num_cells", "cap"))
+class GridOverflowError(RuntimeError):
+    """``grid_count(strict=True)``: a cell overflowed ``cap`` — the count
+    would be a silent lower bound."""
+
+
 def grid_count(subs: Extents, upds: Extents, *, num_cells: int = 64,
-               length: float = 1.0e6, cap: int = 512):
+               length: float = 1.0e6, cap: int = 512, strict: bool = False):
     """Exact match count via grid binning + per-cell BF with first-cell dedup.
 
     Returns (count, overflow) — a nonzero overflow means ``cap`` was too
-    small for the densest cell and the count is a lower bound (callers
-    assert overflow == 0; the benchmark sizes cap from α).
+    small for the densest cell and the count is a LOWER BOUND.  With
+    ``strict=True`` that silent undercount becomes a
+    :class:`GridOverflowError` instead (the check runs on host, outside
+    the jitted kernel).  Extents with negative coordinates are folded into
+    cell 0 by the ``clip`` binning — legal (the count stays exact: both
+    members of a pair fold to the same cells) but it concentrates load, so
+    negative-heavy workloads overflow ``cap`` early; ``strict=True`` is
+    the guard that makes that visible.
     """
+    count, overflow = _grid_count_jit(subs, upds, num_cells=num_cells,
+                                      length=length, cap=cap)
+    if strict and int(overflow) > 0:
+        raise GridOverflowError(
+            f"grid_count overflow: {int(overflow)} extent-cell assignments "
+            f"dropped beyond cap={cap} (count {int(count)} is a lower "
+            "bound) — raise cap or num_cells")
+    return count, overflow
+
+
+@functools.partial(jax.jit, static_argnames=("num_cells", "cap"))
+def _grid_count_jit(subs: Extents, upds: Extents, *, num_cells: int = 64,
+                    length: float = 1.0e6, cap: int = 512):
     cell_w = length / num_cells
     s_buckets, s_over = _bin_extents(subs.lo, subs.hi, num_cells, cell_w, cap)
     u_buckets, u_over = _bin_extents(upds.lo, upds.hi, num_cells, cell_w, cap)

@@ -68,6 +68,23 @@ def intersect_ddim(a: Extents, b: Extents):
     return jnp.all(per_dim, axis=0)
 
 
+def _segment_length(alpha: float, length: float, total: int) -> float:
+    """The paper-§5 segment length l = αL/N, guarded.
+
+    With α·L/N > L, ``maxval = length - seg_len`` goes negative and
+    ``jax.random.uniform`` silently samples a *reversed* interval — extents
+    outside the routing space with lo > maxval, poisoning every matcher's
+    ``lo <= hi`` precondition downstream.  Raise at the source instead.
+    """
+    seg_len = alpha * length / total
+    if seg_len > length:
+        raise ValueError(
+            f"alpha={alpha} with N={total} regions gives segment length "
+            f"{seg_len} > routing space {length} (need alpha <= N); "
+            "placement range length - seg_len would be negative")
+    return seg_len
+
+
 def make_uniform_workload(
     key: jax.Array,
     n_sub: int,
@@ -83,7 +100,7 @@ def make_uniform_workload(
     the *overlapping degree* — an indirect control of the match count ``K``.
     """
     total = n_sub + n_upd
-    seg_len = alpha * length / total
+    seg_len = _segment_length(alpha, length, total)
     shape = (total,) if d == 1 else (d, total)
     k_lo, = jax.random.split(key, 1)
     lo = jax.random.uniform(k_lo, shape, minval=0.0, maxval=length - seg_len,
@@ -109,7 +126,7 @@ def make_clustered_workload(
     d-cube around its center) — hot spots in *every* projection.
     """
     total = n_sub + n_upd
-    seg_len = alpha * length / total
+    seg_len = _segment_length(alpha, length, total)
     kc, kj = jax.random.split(key)
     shape = (total,) if d == 1 else (d, total)
     centers = jax.random.uniform(kc, (n_clusters,) if d == 1 else (d, n_clusters),
@@ -143,7 +160,7 @@ def make_tall_thin_workload(
     if d < 2:
         raise ValueError("tall-thin needs d >= 2 (one wide + one thin dim)")
     total = n_sub + n_upd
-    seg_len = alpha * length / total
+    seg_len = _segment_length(alpha, length, total)
     k_lo, k_wide = jax.random.split(key)
     lo = jax.random.uniform(k_lo, (d, total), minval=0.0,
                             maxval=length - seg_len, dtype=jnp.float32)

@@ -9,8 +9,15 @@ applied as one batch to a persistent
 stream survives across queries, each batch of ``b`` changes sorts only its
 own 2·b delta endpoints, and :meth:`flush` reports exactly the match pairs
 the batch created and destroyed (delta rematching — the HLA notification
-set).  ``all_pairs``/``match_count`` read a cached match state that the
+set) via one stacked vectorized rematch over the changed block (DESIGN.md
+§6).  ``all_pairs``/``match_count`` read a cached match state that the
 per-batch deltas keep current.
+
+The region tables grow by amortized doubling — ``capacity`` is an initial
+allocation, never a ceiling — and every mutation has a bulk form
+(``register_subscriptions``/``move_updates``/… taking ``(b, d)`` blocks
+and rid arrays), so production-scale churn pays one Python call per
+*batch*, not per region.
 
 The stateless sweep (:func:`repro.core.enumerate.sbm_enumerate`) remains
 the rebuild path — it (re)creates the cache on first query — and the oracle
@@ -49,7 +56,10 @@ class _RegionTable:
     @classmethod
     def create(cls, d: int, capacity: int) -> "_RegionTable":
         # Dead slots are [+inf, -inf]: inert for every matcher — any
-        # closed-interval overlap test against them is False.
+        # closed-interval overlap test against them is False.  Capacity is
+        # clamped to >= 1 (like IncrementalIndex) so the doubling in
+        # _grow always advances.
+        capacity = max(int(capacity), 1)
         return cls(
             lo=np.full((d, capacity), np.inf, np.float32),
             hi=np.full((d, capacity), -np.inf, np.float32),
@@ -69,15 +79,56 @@ class _RegionTable:
         """
         return incr_lib._as_bounds(self.lo.shape[0], lo, hi)
 
+    def _validated_block(self, lo, hi) -> Tuple[np.ndarray, np.ndarray]:
+        """Validate a ``(b, d)`` (or ``(b,)`` for d=1) bounds block; return
+        the ``(d, b)`` store layout.  One comparison pass for the block —
+        the bulk form of :meth:`_validated`, delegating to the incremental
+        engine's :func:`_as_bounds_block` (one contract, both layers)."""
+        return incr_lib._as_bounds_block(self.lo.shape[0], lo, hi)
+
+    def _grow(self, min_capacity: int) -> None:
+        """Amortized doubling, like ``IncrementalIndex._ensure_capacity`` —
+        registration volume must never hit a fixed ceiling."""
+        cap = self.live.shape[0]
+        if min_capacity <= cap:
+            return
+        new = cap
+        while new < min_capacity:
+            new *= 2
+        for name, fill in (("lo", np.inf), ("hi", -np.inf)):
+            grown = np.full((self.lo.shape[0], new), fill, np.float32)
+            grown[:, :cap] = getattr(self, name)
+            setattr(self, name, grown)
+        live = np.zeros(new, bool)
+        live[:cap] = self.live
+        self.live = live
+        # fresh slots pop *after* the existing free ids (list pops tail-first)
+        self.free = list(range(new - 1, cap - 1, -1)) + self.free
+
     def insert(self, lo: Sequence[float], hi: Sequence[float]) -> int:
         lo, hi = self._validated(lo, hi)
         if not self.free:
-            raise RuntimeError("region table full — grow capacity")
+            self._grow(2 * self.live.shape[0])
         rid = self.free.pop()
         self.lo[:, rid] = lo
         self.hi[:, rid] = hi
         self.live[rid] = True
         return rid
+
+    def insert_many(self, lo, hi) -> np.ndarray:
+        """Insert b regions from a ``(b, d)`` block; return their rids."""
+        lo, hi = self._validated_block(lo, hi)
+        b = lo.shape[1]
+        if b == 0:
+            return np.zeros(0, np.int64)
+        if len(self.free) < b:
+            self._grow(int(self.live.sum()) + b)
+        rids = np.asarray(self.free[-b:][::-1], np.int64)  # == b tail pops
+        del self.free[-b:]
+        self.lo[:, rids] = lo
+        self.hi[:, rids] = hi
+        self.live[rids] = True
+        return rids
 
     def remove(self, rid: int) -> None:
         if not self.live[rid]:
@@ -87,12 +138,44 @@ class _RegionTable:
         self.hi[:, rid] = -np.inf
         self.free.append(rid)
 
+    def remove_many(self, rids) -> np.ndarray:
+        rids = self._validated_live(rids, unique=True)
+        self.live[rids] = False
+        self.lo[:, rids] = np.inf
+        self.hi[:, rids] = -np.inf
+        self.free.extend(rids.tolist())
+        return rids
+
     def move(self, rid: int, lo: Sequence[float], hi: Sequence[float]) -> None:
         lo, hi = self._validated(lo, hi)
         if not self.live[rid]:
             raise KeyError(f"region {rid} not registered")
         self.lo[:, rid] = lo
         self.hi[:, rid] = hi
+
+    def move_many(self, rids, lo, hi) -> np.ndarray:
+        lo, hi = self._validated_block(lo, hi)
+        rids = self._validated_live(rids, unique=True)
+        if rids.shape[0] != lo.shape[1]:
+            raise ValueError(f"{rids.shape[0]} rids but bounds for "
+                             f"{lo.shape[1]} regions")
+        self.lo[:, rids] = lo
+        self.hi[:, rids] = hi
+        return rids
+
+    def _validated_live(self, rids, *, unique: bool) -> np.ndarray:
+        rids = np.atleast_1d(np.asarray(rids, np.int64))
+        if rids.size == 0:
+            return rids
+        bad = rids[(rids < 0) | (rids >= self.live.shape[0])
+                   | ~self.live[np.clip(rids, 0, self.live.shape[0] - 1)]]
+        if bad.size:
+            raise KeyError(f"region {int(bad[0])} not registered")
+        if unique and np.unique(rids).size != rids.size:
+            vals, counts = np.unique(rids, return_counts=True)
+            raise ValueError(
+                f"region {int(vals[counts > 1][0])} repeated in one bulk call")
+        return rids
 
     def live_ids(self) -> np.ndarray:
         return np.nonzero(self.live)[0]
@@ -125,11 +208,13 @@ class DDMService:
     always current.
     """
 
-    def __init__(self, dims: int = 1, capacity: int = 4096):
+    def __init__(self, dims: int = 1, capacity: int = 4096,
+                 delta_impl: str = "vector"):
         self.dims = dims
         self._subs = _RegionTable.create(dims, capacity)
         self._upds = _RegionTable.create(dims, capacity)
-        self._index = IncrementalIndex(dims=dims, capacity=capacity)
+        self._index = IncrementalIndex(dims=dims, capacity=capacity,
+                                       delta_impl=delta_impl)
         # pending[(side, rid)] ∈ {"add", "move", "remove"} — composed so a
         # rid reaches the index at most once per batch
         self._pending: Dict[Tuple[str, int], str] = {}
@@ -149,9 +234,19 @@ class DDMService:
                 del self._pending[key]       # add then remove: net no-op
             # add then move: still an add (with the latest bounds)
         elif prev == "move":
-            self._pending[key] = "move" if op == "move" else "remove"
+            if op == "add":
+                # Reachable only if the table invariant broke (a live rid
+                # re-inserted without an intervening remove).  This used to
+                # be silently composed to "remove" — losing the region.
+                raise ValueError(
+                    f"{side} region {rid}: 'add' composed onto a pending "
+                    "'move' — the table must free a rid before re-insert")
+            self._pending[key] = op          # move∘move=move, move∘remove=remove
         else:  # prev == "remove" — the slot was freed and re-inserted
-            assert op == "add", "table guarantees remove before re-insert"
+            if op != "add":
+                raise ValueError(
+                    f"{side} region {rid}: {op!r} composed onto a pending "
+                    "'remove' — only a re-insert may follow a remove")
             self._pending[key] = "move"      # net effect: extent replaced
 
     # -- registration -----------------------------------------------------
@@ -183,6 +278,54 @@ class DDMService:
         self._upds.move(rid, lo, hi)
         self._queue(UPD, rid, "move")
 
+    # -- bulk mutations -----------------------------------------------------
+    # One call per *batch*, not per region: bounds arrive as (b, d) blocks
+    # ((b,) for d=1), rids as int arrays, and the tables grow elastically —
+    # registration volume never hits a capacity ceiling.  The next flush
+    # rematches the whole block in one stacked vectorized pass.
+    def _queue_many(self, side: str, rids: np.ndarray, op: str) -> None:
+        pend = self._pending
+        if not pend:                          # bulk fast path: nothing to
+            pend.update(((side, int(r)), op) for r in rids)   # compose against
+            return
+        # Compose only rids that already have a pending entry (rare: freed-
+        # rid reuse within one batch); everything else is a plain dict store
+        # — back-to-back bulk calls stay O(b) dict ops, not O(b) _queue calls.
+        queue = self._queue
+        for r in rids.tolist():
+            if (side, r) in pend:
+                queue(side, r, op)
+            else:
+                pend[(side, r)] = op
+
+    def register_subscriptions(self, lo, hi) -> np.ndarray:
+        """Register b subscription regions from a ``(b, d)`` block; returns
+        their rids (the bulk form of :meth:`register_subscription`)."""
+        rids = self._subs.insert_many(lo, hi)
+        self._queue_many(SUB, rids, "add")
+        return rids
+
+    def register_updates(self, lo, hi) -> np.ndarray:
+        rids = self._upds.insert_many(lo, hi)
+        self._queue_many(UPD, rids, "add")
+        return rids
+
+    def move_subscriptions(self, rids, lo, hi) -> None:
+        rids = self._subs.move_many(rids, lo, hi)
+        self._queue_many(SUB, rids, "move")
+
+    def move_updates(self, rids, lo, hi) -> None:
+        rids = self._upds.move_many(rids, lo, hi)
+        self._queue_many(UPD, rids, "move")
+
+    def unregister_subscriptions(self, rids) -> None:
+        rids = self._subs.remove_many(rids)
+        self._queue_many(SUB, rids, "remove")
+
+    def unregister_updates(self, rids) -> None:
+        rids = self._upds.remove_many(rids)
+        self._queue_many(UPD, rids, "remove")
+
     # -- the incremental engine -------------------------------------------
     def flush(self) -> BatchDelta:
         """Apply pending mutations as ONE index batch; return the delta.
@@ -190,14 +333,14 @@ class DDMService:
         The returned :class:`BatchDelta` holds exactly the (sub rid, upd
         rid) pairs the batch created (``added``) and destroyed
         (``removed``) — the DDM notification set a federation needs after a
-        round of moves — at O(b·log b + n + m) index maintenance plus one
-        vectorized O(m) rematch per changed region (output O(K_changed)).
-        That beats the world rebuild for small batches (the churn hot
-        path).  For bulk batches (b beyond ~0.2% of the world on this
-        container — see EXPERIMENTS.md §Churn) call
-        :meth:`invalidate_cache` first: with
-        no cached match state a plain query skips delta computation and
-        rebuilds once via the stateless sweep.
+        round of moves — at O(b·log b + n + m) index maintenance plus ONE
+        stacked vectorized rematch over all changed regions (output
+        O(K_changed); dense mask / fused jit / sort-based by b·m — see
+        EXPERIMENTS.md §Churn for the bulk axis).  That beats the world
+        rebuild from single moves up through bulk batches.  When most of
+        the world changed, :meth:`invalidate_cache` first is still
+        cheaper: with no cached match state a plain query skips delta
+        computation and rebuilds once via the stateless sweep.
         """
         return self._flush(want_delta=True)
 
@@ -215,18 +358,28 @@ class DDMService:
     def _flush(self, want_delta: bool) -> BatchDelta:
         if not self._pending:
             return BatchDelta(set(), set())
-        adds: List[Tuple[str, int, np.ndarray, np.ndarray]] = []
-        moves: List[Tuple[str, int, np.ndarray, np.ndarray]] = []
-        removes: List[Tuple[str, int]] = []
+        # Build the index batch as side-grouped rid arrays + ONE fancy-index
+        # gather per group out of the live tables — no per-region tuple
+        # copies, no Python call per region on the way into the index.
+        rid_lists: Dict[Tuple[str, str], List[int]] = {}
         for (side, rid), op in self._pending.items():
-            if op == "remove":
-                removes.append((side, rid))
-            else:
-                t = self._table(side)
-                entry = (side, rid, t.lo[:, rid].copy(), t.hi[:, rid].copy())
-                (adds if op == "add" else moves).append(entry)
+            rid_lists.setdefault((side, op), []).append(rid)
         self._pending.clear()
-        delta = self._index.apply_batch(
+        adds: Dict[str, tuple] = {}
+        moves: Dict[str, tuple] = {}
+        removes: Dict[str, np.ndarray] = {}
+        for side in (SUB, UPD):
+            t = self._table(side)
+            for op, dest in (("add", adds), ("move", moves)):
+                rids = rid_lists.get((side, op))
+                if rids:
+                    r = np.asarray(rids, np.int64)
+                    # .T: the index's (b, d) contract over the (d, b) store
+                    dest[side] = (r, t.lo[:, r].T, t.hi[:, r].T)
+            rids = rid_lists.get((side, "remove"))
+            if rids:
+                removes[side] = np.asarray(rids, np.int64)
+        delta = self._index.apply_batch_arrays(
             adds=adds, moves=moves, removes=removes,
             want_delta=want_delta or self._match_cache is not None)
         if self._match_cache is not None:

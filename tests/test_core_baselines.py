@@ -8,12 +8,15 @@ import pytest
 from _hyp import HAVE_HYPOTHESIS, given, settings, st
 from repro.core import (
     Extents,
+    GridOverflowError,
     bf_count,
     brute_force_count_numpy,
     brute_force_pairs_numpy,
     enumerate_matches,
     enumerate_matches_ddim,
     grid_count,
+    make_clustered_workload,
+    make_tall_thin_workload,
     make_uniform_workload,
     match_matrix,
     match_matrix_ddim,
@@ -72,6 +75,66 @@ def test_grid_overflow_reported():
     count, overflow = grid_count(Extents(lo, hi), Extents(lo, hi),
                                  num_cells=1, length=1.0, cap=4)
     assert int(overflow) > 0
+
+
+def test_grid_strict_raises_on_overflow():
+    """Satellite: the silent lower bound becomes a loud error on demand."""
+    lo = jnp.zeros((8,), jnp.float32)
+    hi = jnp.ones((8,), jnp.float32)
+    with pytest.raises(GridOverflowError):
+        grid_count(Extents(lo, hi), Extents(lo, hi),
+                   num_cells=1, length=1.0, cap=4, strict=True)
+    # strict is free when nothing overflows
+    count, overflow = grid_count(Extents(lo, hi), Extents(lo, hi),
+                                 num_cells=1, length=1.0, cap=16, strict=True)
+    assert int(overflow) == 0 and int(count) == 64
+
+
+def test_grid_negative_coordinates_fold_into_cell_zero():
+    """Satellite: clip binning folds negative-coordinate extents into cell
+    0 — the count must stay exact while they fit, and strict mode must
+    flag the overflow they cause once the folded cell exceeds cap."""
+    rng = np.random.RandomState(4)
+    n = 40
+    lo = rng.uniform(-500.0, -10.0, n).astype(np.float32)   # all negative
+    hi = lo + rng.uniform(0.0, 30.0, n).astype(np.float32)
+    subs = Extents(jnp.asarray(lo), jnp.asarray(hi))
+    lo2 = rng.uniform(-500.0, 50.0, n).astype(np.float32)   # straddling 0
+    upds = Extents(jnp.asarray(lo2),
+                   jnp.asarray(lo2 + rng.uniform(0.0, 30.0, n).astype(np.float32)))
+    want = brute_force_count_numpy(subs, upds)
+    count, overflow = grid_count(subs, upds, num_cells=16, length=160.0,
+                                 cap=128, strict=True)
+    assert int(overflow) == 0
+    assert int(count) == want
+    # everything negative lands in cell 0, so a small cap must overflow —
+    # and strict turns that silent undercount into an error
+    with pytest.raises(GridOverflowError):
+        grid_count(subs, upds, num_cells=16, length=160.0, cap=8,
+                   strict=True)
+    count_loose, overflow_loose = grid_count(subs, upds, num_cells=16,
+                                             length=160.0, cap=8)
+    assert int(overflow_loose) > 0          # non-strict still just reports
+    assert int(count_loose) <= want         # ...and the count is a lower bound
+
+
+@pytest.mark.parametrize("maker,kwargs", [
+    (make_uniform_workload, {}),
+    (make_clustered_workload, {}),
+    (make_tall_thin_workload, {"d": 2}),
+])
+def test_workload_rejects_oversized_segments(maker, kwargs):
+    """Satellite: alpha·L/N > L used to flip maxval negative and silently
+    sample reversed intervals outside the routing space; now it raises."""
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError):
+        maker(key, 4, 4, alpha=100.0, length=1000.0, **kwargs)  # l = 12.5·L
+    # the boundary case alpha == N (l == L) stays legal: lo pins to 0
+    subs, upds = maker(key, 4, 4, alpha=8.0, length=1000.0, **kwargs)
+    s_lo = np.asarray(subs.lo)
+    s_hi = np.asarray(subs.hi)
+    assert np.all(s_lo <= s_hi)
+    assert np.all(s_lo >= 0.0) and np.all(s_hi <= 1000.0 + 1e-3)
 
 
 def test_enumerate_matches(workload):

@@ -207,6 +207,216 @@ def test_index_stream_stays_sorted_under_churn():
 
 
 # ---------------------------------------------------------------------------
+# bulk array batches (satellite: vectorized delta == sweep set-difference)
+# ---------------------------------------------------------------------------
+
+def _random_bulk_batch(rng, live, next_rid, max_add=700, max_move=900,
+                       max_remove=400):
+    """One random side-grouped ARRAY batch (the apply_batch_arrays
+    contract), mirrored into ``live``.  Up to ~2k changed regions."""
+    adds, moves, removes = {}, {}, {}
+    for side in ("sub", "upd"):
+        prev_ids = np.asarray(sorted(live[side]), np.int64)
+        n_mv = min(prev_ids.size, rng.randint(0, max_move + 1))
+        n_rm = min(prev_ids.size - n_mv, rng.randint(0, max_remove + 1))
+        chosen = (rng.choice(prev_ids, size=n_mv + n_rm, replace=False)
+                  if n_mv + n_rm else np.zeros(0, np.int64))
+        mv, rm = chosen[:n_mv], chosen[n_mv:]
+        if mv.size:
+            lo = rng.randint(0, 5000, mv.size).astype(np.float32)
+            hi = lo + rng.randint(0, 60, mv.size)
+            moves[side] = (mv, lo, hi)
+            for r, l, h in zip(mv.tolist(), lo, hi):
+                live[side][r] = ([l], [h])
+        if rm.size:
+            removes[side] = rm
+            for r in rm.tolist():
+                del live[side][r]
+        n_add = rng.randint(0, max_add + 1)
+        if n_add:
+            rids = np.arange(next_rid[side], next_rid[side] + n_add,
+                             dtype=np.int64)
+            next_rid[side] += n_add
+            lo = rng.randint(0, 5000, n_add).astype(np.float32)
+            hi = lo + rng.randint(0, 60, n_add)
+            adds[side] = (rids, lo, hi)
+            for r, l, h in zip(rids.tolist(), lo, hi):
+                live[side][r] = ([l], [h])
+    return adds, moves, removes
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_index_bulk_array_batches_match_sweep_setdiff(seed):
+    """Satellite acceptance: random mixed bulk batches (b up to ~2k)
+    through apply_batch_arrays — the vectorized BatchDelta equals the set
+    difference of stateless sweep enumerations before/after every batch,
+    across index growth boundaries (capacity 8 → thousands), and agrees
+    exactly with the per-region loop impl fed the same batches."""
+    rng = np.random.RandomState(seed)
+    idx = IncrementalIndex(dims=1, capacity=8)           # growth exercised
+    ref = IncrementalIndex(dims=1, capacity=8, delta_impl="loop")
+    live = {"sub": {}, "upd": {}}
+    next_rid = {"sub": 0, "upd": 0}
+    before = set()
+    for step in range(4):
+        adds, moves, removes = _random_bulk_batch(rng, live, next_rid)
+        delta = idx.apply_batch_arrays(adds=adds, moves=moves,
+                                       removes=removes)
+        ref_delta = ref.apply_batch_arrays(adds=adds, moves=moves,
+                                           removes=removes)
+        assert delta == ref_delta, f"batch {step}: vector != loop impl"
+        after = _sweep_oracle_pairs(live["sub"], live["upd"])
+        assert delta.added == after - before, f"batch {step}"
+        assert delta.removed == before - after, f"batch {step}"
+        before = after
+    assert len(before) > 0                   # the run actually matched things
+    assert next_rid["sub"] > 8               # ...and actually grew the tables
+
+
+def test_index_array_api_equals_tuple_api():
+    """The two batch surfaces are one engine: identical deltas and states."""
+    rng = np.random.RandomState(5)
+    tup = IncrementalIndex(dims=2, capacity=4)
+    arr = IncrementalIndex(dims=2, capacity=4)
+    live = {"sub": {}, "upd": {}}
+    next_rid = {"sub": 0, "upd": 0}
+    for _ in range(25):
+        adds, moves, removes = _random_batch(rng, live, next_rid, dims=2)
+        d_tup = tup.apply_batch(adds=adds, moves=moves, removes=removes)
+        d_arr = arr.apply_batch_arrays(
+            adds={s: (np.asarray([r for s2, r, _, _ in adds if s2 == s]),
+                      np.stack([lo for s2, _, lo, _ in adds if s2 == s]),
+                      np.stack([hi for s2, _, _, hi in adds if s2 == s]))
+                  for s in ("sub", "upd")
+                  if any(s2 == s for s2, _, _, _ in adds)},
+            moves={s: (np.asarray([r for s2, r, _, _ in moves if s2 == s]),
+                       np.stack([lo for s2, _, lo, _ in moves if s2 == s]),
+                       np.stack([hi for s2, _, _, hi in moves if s2 == s]))
+                   for s in ("sub", "upd")
+                   if any(s2 == s for s2, _, _, _ in moves)},
+            removes={s: np.asarray([r for s2, r in removes if s2 == s])
+                     for s in ("sub", "upd")
+                     if any(s2 == s for s2, _ in removes)})
+        assert d_tup == d_arr
+        assert tup.all_pairs() == arr.all_pairs()
+
+
+def test_index_array_api_validation():
+    idx = IncrementalIndex(dims=1)
+    idx.apply_batch_arrays(adds={"sub": (np.array([0]),
+                                         np.array([0.0]), np.array([1.0]))})
+    with pytest.raises(ValueError):          # malformed bounds in the block
+        idx.apply_batch_arrays(adds={"upd": (np.array([0, 1]),
+                                             np.array([5.0, 0.0]),
+                                             np.array([1.0, 2.0]))})
+    with pytest.raises(ValueError):          # duplicate rid across op groups
+        idx.apply_batch_arrays(
+            moves={"sub": (np.array([0]), np.array([1.0]), np.array([2.0]))},
+            removes={"sub": np.array([0])})
+    with pytest.raises(ValueError):          # add of a live rid
+        idx.apply_batch_arrays(adds={"sub": (np.array([0]),
+                                             np.array([0.0]),
+                                             np.array([1.0]))})
+    with pytest.raises(KeyError):            # move/remove of a dead rid
+        idx.apply_batch_arrays(removes={"upd": np.array([3])})
+    with pytest.raises(ValueError):          # negative rids
+        idx.apply_batch_arrays(adds={"sub": (np.array([-1]),
+                                             np.array([0.0]),
+                                             np.array([1.0]))})
+    with pytest.raises(ValueError):          # rid/bounds length mismatch
+        idx.apply_batch_arrays(adds={"upd": (np.array([1, 2]),
+                                             np.array([0.0]),
+                                             np.array([1.0]))})
+    with pytest.raises(ValueError):          # unknown side
+        idx.apply_batch_arrays(removes={"pub": np.array([0])})
+    assert idx.all_pairs() == set()          # failed batches left no debris
+    assert idx.n_live("sub") == 1 and idx.n_live("upd") == 0
+
+
+def test_index_array_api_tolerates_empty_groups():
+    """A zero-size adds/moves block alongside a real op on the same side
+    must behave exactly like an omitted key (regression: rids.max() on an
+    empty array)."""
+    idx = IncrementalIndex(dims=1)
+    idx.apply_batch_arrays(adds={"sub": (np.array([0]), np.array([0.0]),
+                                         np.array([10.0])),
+                                 "upd": (np.array([0]), np.array([5.0]),
+                                         np.array([6.0]))})
+    empty = (np.zeros(0, np.int64), np.zeros((0, 1)), np.zeros((0, 1)))
+    d = idx.apply_batch_arrays(adds={"sub": empty},
+                               removes={"sub": np.array([0])})
+    assert d.removed == {(0, 0)} and d.added == set()
+    d = idx.apply_batch_arrays(moves={"upd": empty},
+                               adds={"sub": (np.array([1]), np.array([5.5]),
+                                             np.array([5.8]))})
+    assert d.added == {(1, 0)}
+
+
+def test_infinite_extent_in_jax_mask_regime(monkeypatch):
+    """A legitimate (-inf, +inf) match-everything region also overlaps the
+    fused-mask regime's pow2-padding sentinels — padded indices must be
+    filtered, not emitted as out-of-range rids (regression)."""
+    import repro.core.incremental as incr
+    monkeypatch.setattr(incr, "_DENSE_MASK_ELEMS", 0)   # force the jax tier
+    monkeypatch.setattr(incr, "_JAX_MASK_ELEMS", 1 << 40)
+    idx = IncrementalIndex(dims=1)
+    idx.apply_batch_arrays(adds={
+        "sub": (np.array([0, 1, 2]),                    # 3 → pads to 4
+                np.array([-np.inf, 0.0, 50.0], np.float32),
+                np.array([np.inf, 10.0, 60.0], np.float32)),
+        "upd": (np.array([0, 1, 2]),
+                np.array([-np.inf, 5.0, 200.0], np.float32),
+                np.array([np.inf, 6.0, 210.0], np.float32))})
+    want = {(0, 0), (0, 1), (0, 2), (1, 0), (2, 0), (1, 1)}
+    assert idx.all_pairs() == want
+    d = idx.apply_batch_arrays(moves={"upd": (np.array([2]),
+                                              np.array([55.0], np.float32),
+                                              np.array([58.0], np.float32))})
+    assert d.added == {(2, 2)} and d.removed == set()
+
+
+def test_bulk_overlap_regimes_agree(monkeypatch):
+    """dense-mask, jitted-JAX-mask and sort-based candidate regimes of
+    _bulk_overlap_pairs return identical pair sets (d = 1, 2, 3)."""
+    import repro.core.incremental as incr
+    rng = np.random.RandomState(7)
+    for d in (1, 2, 3):
+        b, m = rng.randint(40, 90), rng.randint(50, 120)
+        q_lo = rng.randint(0, 40, (d, b)).astype(np.float32)
+        q_hi = q_lo + rng.randint(0, 10, (d, b))
+        c_lo = rng.randint(0, 40, (d, m)).astype(np.float32)
+        c_hi = c_lo + rng.randint(0, 10, (d, m))
+        results = {}
+        for regime, (dense, jaxm) in {"dense": (1 << 40, 1 << 41),
+                                      "jax": (0, 1 << 40),
+                                      "sort": (0, 0)}.items():
+            monkeypatch.setattr(incr, "_DENSE_MASK_ELEMS", dense)
+            monkeypatch.setattr(incr, "_JAX_MASK_ELEMS", jaxm)
+            qi, cj = incr._bulk_overlap_pairs(q_lo, q_hi, c_lo, c_hi)
+            results[regime] = set(zip(qi.tolist(), cj.tolist()))
+        assert results["dense"] == results["jax"] == results["sort"], d
+
+
+def test_index_bulk_delta_exact_in_sort_regime(monkeypatch):
+    """End-to-end churn correctness with the sort-based regime forced on
+    (every rematch, however small, takes the searchsorted path)."""
+    import repro.core.incremental as incr
+    monkeypatch.setattr(incr, "_DENSE_MASK_ELEMS", 0)
+    monkeypatch.setattr(incr, "_JAX_MASK_ELEMS", 0)
+    rng = np.random.RandomState(9)
+    idx = IncrementalIndex(dims=1, capacity=4)
+    live = {"sub": {}, "upd": {}}
+    next_rid = {"sub": 0, "upd": 0}
+    pairs = set()
+    for step in range(30):
+        adds, moves, removes = _random_batch(rng, live, next_rid, dims=1)
+        delta = idx.apply_batch(adds=adds, moves=moves, removes=removes)
+        pairs -= delta.removed
+        pairs |= delta.added
+        assert pairs == _sweep_oracle_pairs(live["sub"], live["upd"]), step
+
+
+# ---------------------------------------------------------------------------
 # DDMService churn sequences (satellite: oracle check after EVERY batch)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,200 @@
+"""The elastic bulk-churn path of DDMService: region tables grow by
+amortized doubling (no capacity ceiling), bulk mutations take (b, d)
+blocks and one Python call per *batch*, and the flushed delta stays exact
+against the stateless sweep — including across table growth boundaries
+and the rid-reuse composition chains of the pending queue."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import DDMService, brute_force_pairs_numpy
+from repro.core.incremental import SUB
+from repro.core.service import _RegionTable
+from repro.core.sweep import sequential_sbm_pairs_numpy
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _oracle(svc):
+    sl = svc._subs.live_ids()
+    ul = svc._upds.live_ids()
+    if sl.size == 0 or ul.size == 0:
+        return set()
+    subs = svc._subs.compact(sl)
+    upds = svc._upds.compact(ul)
+    want = (sequential_sbm_pairs_numpy(subs, upds) if svc.dims == 1
+            else brute_force_pairs_numpy(subs, upds))
+    return {(int(sl[i]), int(ul[j])) for i, j in want}
+
+
+# ---------------------------------------------------------------------------
+# elastic region tables (tentpole: the capacity RuntimeError is gone)
+# ---------------------------------------------------------------------------
+
+def test_scalar_insert_grows_past_capacity():
+    svc = DDMService(dims=1, capacity=4)
+    rids = [svc.register_subscription([float(i)], [float(i) + 0.5])
+            for i in range(64)]          # 16x the initial capacity
+    assert len(set(rids)) == 64
+    assert svc.match_count() == 0
+    u = svc.register_update([10.0], [10.4])
+    assert svc.matches_for_update(u) == [rids[10]]
+
+
+def test_bulk_register_grows_in_one_call():
+    """Thousands of regions into a capacity-4 service, one bulk call per
+    side — the acceptance-criterion shape (no RuntimeError at any scale)."""
+    n = 5000
+    rng = np.random.RandomState(0)
+    svc = DDMService(dims=1, capacity=4)
+    s_lo = rng.uniform(0, 1e6, n).astype(np.float32)
+    u_lo = rng.uniform(0, 1e6, n).astype(np.float32)
+    sids = svc.register_subscriptions(s_lo, s_lo + 500.0)
+    uids = svc.register_updates(u_lo, u_lo + 500.0)
+    assert sids.size == n and uids.size == n
+    assert np.unique(np.concatenate([sids])).size == n
+    assert int(svc._subs.live.sum()) == n
+    assert svc.all_pairs() == _oracle(svc)
+
+
+def test_capacity_zero_grows_instead_of_hanging():
+    """Regression: capacity=0 made _grow's doubling loop spin forever
+    (0 · 2 = 0); create() now clamps to 1, like the incremental index."""
+    svc = DDMService(dims=1, capacity=0)
+    sids = svc.register_subscriptions(np.arange(3.0), np.arange(3.0) + 0.4)
+    u = svc.register_update([1.0], [1.2])
+    assert svc.matches_for_update(u) == [int(sids[1])]
+
+
+def test_region_table_growth_keeps_free_list_consistent():
+    t = _RegionTable.create(d=1, capacity=2)
+    rids = [t.insert([float(i)], [float(i)]) for i in range(9)]
+    assert sorted(rids) == list(range(9))          # no rid issued twice
+    t.remove(3)
+    assert t.insert([50.0], [51.0]) == 3           # freed slot reused first
+    more = t.insert_many(np.arange(20.0), np.arange(20.0) + 1)
+    assert np.unique(more).size == 20
+    assert not np.isin(more, rids).any() or 3 not in more
+
+
+# ---------------------------------------------------------------------------
+# bulk mutations: correctness vs the stateless sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims", [1, 2])
+def test_bulk_roundtrip_matches_oracle(dims):
+    rng = np.random.RandomState(1)
+    svc = DDMService(dims=dims, capacity=8)
+    n = 300
+    lo = rng.randint(0, 900, (n, dims)).astype(np.float32)
+    sids = svc.register_subscriptions(lo, lo + rng.randint(0, 60, (n, dims)))
+    lo = rng.randint(0, 900, (n, dims)).astype(np.float32)
+    uids = svc.register_updates(lo, lo + rng.randint(0, 60, (n, dims)))
+    assert svc.all_pairs() == _oracle(svc)         # warm the cache
+
+    before = svc.all_pairs()
+    mv = rng.choice(uids, size=120, replace=False)
+    lo = rng.randint(0, 900, (120, dims)).astype(np.float32)
+    svc.move_updates(mv, lo, lo + rng.randint(0, 60, (120, dims)))
+    rm = rng.choice(sids, size=80, replace=False)
+    svc.unregister_subscriptions(rm)
+    delta = svc.flush()
+    after = _oracle(svc)
+    assert delta.added == after - before
+    assert delta.removed == before - after
+    assert svc.all_pairs() == after
+    assert svc.match_count() == len(after)
+
+
+def test_bulk_accepts_1d_vectors_for_dims1():
+    svc = DDMService(dims=1, capacity=4)
+    sids = svc.register_subscriptions(np.array([0.0, 20.0]),
+                                      np.array([10.0, 30.0]))
+    uids = svc.register_updates(np.array([5.0]), np.array([6.0]))
+    assert svc.all_pairs() == {(int(sids[0]), int(uids[0]))}
+
+
+def test_bulk_validation_leaves_no_debris():
+    svc = DDMService(dims=2, capacity=8)
+    with pytest.raises(ValueError):                 # lo > hi in the block
+        svc.register_subscriptions(np.array([[0.0, 5.0]]),
+                                   np.array([[1.0, 2.0]]))
+    with pytest.raises(ValueError):                 # wrong width
+        svc.register_updates(np.zeros((3, 3)), np.ones((3, 3)))
+    with pytest.raises(ValueError):                 # NaN fails lo <= hi
+        svc.register_updates(np.array([[np.nan, 0.0]]),
+                             np.array([[1.0, 1.0]]))
+    sids = svc.register_subscriptions(np.zeros((2, 2)), np.ones((2, 2)))
+    with pytest.raises(KeyError):                   # dead rid in bulk move
+        svc.move_subscriptions(np.array([int(sids[0]), 99]),
+                               np.zeros((2, 2)), np.ones((2, 2)))
+    with pytest.raises(ValueError):                 # repeated rid in one call
+        svc.unregister_subscriptions(np.array([int(sids[0]), int(sids[0])]))
+    with pytest.raises(ValueError):                 # rids/bounds mismatch
+        svc.move_subscriptions(sids, np.zeros((3, 2)), np.ones((3, 2)))
+    assert svc.match_count() == 0
+    assert int(svc._subs.live.sum()) == 2           # only the good insert
+
+
+# ---------------------------------------------------------------------------
+# pending-queue composition (satellite: the silent move+add->remove bug)
+# ---------------------------------------------------------------------------
+
+def test_queue_add_onto_pending_move_raises():
+    """prev=='move', op=='add' used to silently compose to 'remove' —
+    dropping a live region from the index.  Now it is a loud ValueError
+    (it is unreachable through the public API while the table invariant
+    holds, which is exactly why it must not fail silently)."""
+    svc = DDMService(dims=1, capacity=4)
+    s = svc.register_subscription([0.0], [1.0])
+    svc.flush()
+    svc.move_subscription(s, [2.0], [3.0])          # pending: move
+    with pytest.raises(ValueError):
+        svc._queue(SUB, s, "add")
+    assert svc._pending[(SUB, s)] == "move"         # composition unchanged
+
+
+def test_queue_illegal_op_after_remove_raises():
+    svc = DDMService(dims=1, capacity=4)
+    s = svc.register_subscription([0.0], [1.0])
+    svc.flush()
+    svc.unregister_subscription(s)                  # pending: remove
+    with pytest.raises(ValueError):
+        svc._queue(SUB, s, "move")
+
+
+def test_rid_reuse_chain_move_remove_reinsert():
+    """Regression for the composition chain around rid reuse: move, then
+    remove, then a re-insert landing on the SAME freed rid inside one
+    batch must net to an index 'move' (extent replaced), with the exact
+    delta."""
+    svc = DDMService(dims=1, capacity=2)
+    s = svc.register_subscription([0.0], [10.0])
+    u = svc.register_update([5.0], [6.0])
+    assert svc.all_pairs() == {(s, u)}
+    svc.move_subscription(s, [100.0], [110.0])      # pending: move
+    svc.unregister_subscription(s)                  # move∘remove -> remove
+    s2 = svc.register_subscription([5.5], [5.8])    # remove∘add -> move
+    assert s2 == s                                  # the slot was reused
+    assert svc._pending[(SUB, s)] == "move"
+    delta = svc.flush()
+    assert delta == (set(), set())                  # (s,u) held throughout
+    assert svc.all_pairs() == {(s, u)} == _oracle(svc)
+
+
+def test_rid_reuse_chain_through_bulk_api():
+    """The same reuse chain driven by bulk calls, across a growth boundary."""
+    svc = DDMService(dims=1, capacity=2)
+    lo = np.arange(0.0, 40.0, 1.0, dtype=np.float32)
+    sids = svc.register_subscriptions(lo, lo + 0.5)     # grows 2 -> 64
+    uids = svc.register_updates(lo, lo + 0.5)
+    assert svc.all_pairs() == _oracle(svc)
+    svc.unregister_subscriptions(sids[:10])
+    reused = svc.register_subscriptions(np.full(10, 500.0, np.float32),
+                                        np.full(10, 600.0, np.float32))
+    assert set(reused.tolist()) == set(sids[:10].tolist())
+    delta = svc.flush()
+    assert delta.removed == {(int(s), int(u))
+                             for s, u in zip(sids[:10], uids[:10])}
+    assert delta.added == set()
+    assert svc.all_pairs() == _oracle(svc)
