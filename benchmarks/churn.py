@@ -31,6 +31,7 @@ import jax
 import numpy as np
 
 from repro.core import DDMService, make_clustered_workload, make_uniform_workload
+from repro.testing.oracles import service_pairs
 
 N_FULL = 100_000          # n = m = 1e5 (the acceptance-criterion scale)
 N_SMOKE = 400
@@ -190,6 +191,8 @@ def bulk_smoke(rows: List[str]) -> None:
             svc.invalidate_cache()
             assert svc.all_pairs() == after, \
                 f"{impl} b={b}: delta cache drifted from sweep rebuild"
+            assert after == service_pairs(svc), \
+                f"{impl} b={b}: delta cache drifted from host oracle"
         assert deltas["vector"] == deltas["loop"], \
             f"b={b}: vectorized delta != per-region loop delta"
         d = deltas["vector"]
@@ -210,6 +213,7 @@ def smoke(rows: List[str]) -> None:
     got = svc.all_pairs()
     svc.invalidate_cache()
     assert svc.all_pairs() == got, "delta path drifted from rebuild"
+    assert got == service_pairs(svc), "delta path drifted from host oracle"
     rows.append(f"churn_smoke_n{N_SMOKE},0,pairs={len(got)}")
     single_move(rows, N_SMOKE, reps=5)
     move_fraction_sweep(rows, N_SMOKE, reps=3)
@@ -241,6 +245,8 @@ def smoke(rows: List[str]) -> None:
     got2 = svc2.all_pairs()
     svc2.invalidate_cache()
     assert svc2.all_pairs() == got2, "d=2 delta path drifted from rebuild"
+    assert got2 == service_pairs(svc2), \
+        "d=2 delta path drifted from host oracle"
     rows.append(f"churn_smoke_d2_talln{n2},0,pairs={len(got2)}")
 
 

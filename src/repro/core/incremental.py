@@ -71,24 +71,29 @@ class BatchDelta(NamedTuple):
     removed: Set[Tuple[int, int]]
 
 
-def _as_bounds(dims: int, lo, hi) -> Tuple[np.ndarray, np.ndarray]:
+def _as_bounds(dims: int, lo, hi, *, rid=None) -> Tuple[np.ndarray, np.ndarray]:
+    who = "" if rid is None else f" (rid {rid})"
     lo = np.atleast_1d(np.asarray(lo, np.float32))
     hi = np.atleast_1d(np.asarray(hi, np.float32))
     if lo.shape != (dims,) or hi.shape != (dims,):
         raise ValueError(
-            f"bounds must have length {dims}: got lo {lo.shape}, hi {hi.shape}")
+            f"bounds{who} must have length {dims}: got lo {lo.shape}, "
+            f"hi {hi.shape}")
     if not np.all(lo <= hi):
-        raise ValueError(f"malformed region: lo {lo} > hi {hi} "
+        raise ValueError(f"malformed region{who}: lo {lo} > hi {hi} "
                          "(the sweep precondition is lo <= hi)")
     return lo, hi
 
 
-def _as_bounds_block(dims: int, lo, hi) -> Tuple[np.ndarray, np.ndarray]:
+def _as_bounds_block(dims: int, lo, hi, *, rids=None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
     """Validate a ``(b, d)`` (or ``(b,)`` for d=1) bounds block; return the
     ``(d, b)`` layout the dense stores use.  The vectorized form of
     :func:`_as_bounds` — one comparison pass for the whole block, shared
     (like ``_as_bounds``) with the service's region tables so both layers
-    enforce one contract."""
+    enforce one contract.  When the caller knows which region each row
+    belongs to, ``rids`` threads that through so the error names the
+    offending rid, not just the row index."""
     lo = np.asarray(lo, np.float32)
     hi = np.asarray(hi, np.float32)
     if lo.ndim == 1 and dims == 1:
@@ -101,8 +106,11 @@ def _as_bounds_block(dims: int, lo, hi) -> Tuple[np.ndarray, np.ndarray]:
     bad = ~(lo <= hi)                           # NaN fails the comparison too
     if bad.any():
         j = int(np.nonzero(bad.any(axis=0))[0][0])
+        rids = np.atleast_1d(np.asarray(rids)) if rids is not None else None
+        who = f" (rid {int(rids[j])})" if rids is not None and j < rids.size \
+            else ""
         raise ValueError(
-            f"malformed region at row {j}: lo {lo[:, j]} > hi {hi[:, j]} "
+            f"malformed region at row {j}{who}: lo {lo[:, j]} > hi {hi[:, j]} "
             "(the sweep precondition is lo <= hi)")
     return lo, hi
 
@@ -356,9 +364,9 @@ class IncrementalIndex:
         maintained (O(b·log b + n + m)) and the returned delta is empty —
         for callers without a live match cache.
         """
-        adds = [(s, int(r), *_as_bounds(self.dims, lo, hi))
+        adds = [(s, int(r), *_as_bounds(self.dims, lo, hi, rid=int(r)))
                 for s, r, lo, hi in adds]
-        moves = [(s, int(r), *_as_bounds(self.dims, lo, hi))
+        moves = [(s, int(r), *_as_bounds(self.dims, lo, hi, rid=int(r)))
                  for s, r, lo, hi in moves]
         removes = [(s, int(r)) for s, r in removes]
 
@@ -398,10 +406,15 @@ class IncrementalIndex:
         tuple API, but validation and application are single vectorized
         passes — the bulk churn path pays no Python cost per region.
         """
-        adds = {s: (np.asarray(r, np.int64), *self._bounds_block(lo, hi))
-                for s, (r, lo, hi) in dict(adds or {}).items()}
-        moves = {s: (np.asarray(r, np.int64), *self._bounds_block(lo, hi))
-                 for s, (r, lo, hi) in dict(moves or {}).items()}
+        def _conv(grp):
+            out = {}
+            for s, (r, lo, hi) in dict(grp or {}).items():
+                r = np.asarray(r, np.int64)
+                out[s] = (r, *self._bounds_block(lo, hi, rids=r))
+            return out
+
+        adds = _conv(adds)
+        moves = _conv(moves)
         removes = {s: np.asarray(r, np.int64)
                    for s, r in dict(removes or {}).items()}
         empty = np.zeros(0, np.int64)
@@ -448,8 +461,8 @@ class IncrementalIndex:
             return BatchDelta(set(), set())
         return self._apply_grouped(adds, moves, removes, want_delta)
 
-    def _bounds_block(self, lo, hi) -> Tuple[np.ndarray, np.ndarray]:
-        return _as_bounds_block(self.dims, lo, hi)
+    def _bounds_block(self, lo, hi, rids=None) -> Tuple[np.ndarray, np.ndarray]:
+        return _as_bounds_block(self.dims, lo, hi, rids=rids)
 
     def _group_entries(self, entries):
         """[(side, rid, lo (d,), hi (d,))] → side → (rids, lo (d,b), hi)."""

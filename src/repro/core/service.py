@@ -79,12 +79,15 @@ class _RegionTable:
         """
         return incr_lib._as_bounds(self.lo.shape[0], lo, hi)
 
-    def _validated_block(self, lo, hi) -> Tuple[np.ndarray, np.ndarray]:
+    def _validated_block(self, lo, hi, rids=None
+                         ) -> Tuple[np.ndarray, np.ndarray]:
         """Validate a ``(b, d)`` (or ``(b,)`` for d=1) bounds block; return
         the ``(d, b)`` store layout.  One comparison pass for the block —
         the bulk form of :meth:`_validated`, delegating to the incremental
-        engine's :func:`_as_bounds_block` (one contract, both layers)."""
-        return incr_lib._as_bounds_block(self.lo.shape[0], lo, hi)
+        engine's :func:`_as_bounds_block` (one contract, both layers).
+        ``rids``, when known, lets the error name the offending region, not
+        just its row index."""
+        return incr_lib._as_bounds_block(self.lo.shape[0], lo, hi, rids=rids)
 
     def _grow(self, min_capacity: int) -> None:
         """Amortized doubling, like ``IncrementalIndex._ensure_capacity`` —
@@ -147,15 +150,17 @@ class _RegionTable:
         return rids
 
     def move(self, rid: int, lo: Sequence[float], hi: Sequence[float]) -> None:
-        lo, hi = self._validated(lo, hi)
+        lo, hi = incr_lib._as_bounds(self.lo.shape[0], lo, hi, rid=rid)
         if not self.live[rid]:
             raise KeyError(f"region {rid} not registered")
         self.lo[:, rid] = lo
         self.hi[:, rid] = hi
 
     def move_many(self, rids, lo, hi) -> np.ndarray:
-        lo, hi = self._validated_block(lo, hi)
+        # rids first: a malformed-bounds error can then name the rid it
+        # belongs to instead of only the row index
         rids = self._validated_live(rids, unique=True)
+        lo, hi = self._validated_block(lo, hi, rids=rids)
         if rids.shape[0] != lo.shape[1]:
             raise ValueError(f"{rids.shape[0]} rids but bounds for "
                              f"{lo.shape[1]} regions")

@@ -1,0 +1,15 @@
+"""Engine conformance harness (DESIGN.md §9).
+
+Submodules (import what you need — kept lazy here so importing
+``repro.testing`` stays cheap):
+
+* :mod:`repro.testing.oracles` — the single source of reference pair sets.
+* :mod:`repro.testing.conformance` — the engine registry and differential
+  checks; every pair-producing path in the repo registers here.
+* :mod:`repro.testing.metamorphic` — oracle-free invariance relations.
+* :mod:`repro.testing.shrink` — deterministic minimal-reproducer shrinking.
+* :mod:`repro.testing.fuzz` — the adversarial workload fuzzer / CLI
+  (``python -m repro.testing.fuzz --seeds N --engines all``).
+"""
+
+__all__ = ["conformance", "fuzz", "metamorphic", "oracles", "shrink"]

@@ -1,0 +1,375 @@
+"""Engine registry: every pair-producing path behind one protocol (DESIGN.md §9).
+
+A :class:`MatchEngine` names a path, declares what it supports (spatial
+dims, endpoint dtypes, stateless vs stateful) and provides a pair-set
+runner ``pairs(subs, upds) -> {(i, j)}`` that internally honors the
+repo-wide ``max_pairs`` check-and-retry overflow contract.  Engines
+register themselves into a module-level registry; the conformance tests
+and the fuzzer enumerate :func:`all_engines` at run time, so a newly
+registered engine is differential-tested by default — there is no second
+list to update.
+
+Stateful paths (the incremental index, the service facade) are wrapped as
+build-from-scratch runners here; their *churn* behavior is covered by the
+churn runners (:func:`churn_runner`) which drive identical add/move/remove
+scripts through every delta implementation plus the stateless rebuild.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.intervals import Extents
+from repro.testing import oracles
+
+Pair = Tuple[int, int]
+PairSet = Set[Pair]
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchEngine:
+    """One pair-producing path under conformance.
+
+    ``pairs`` is the pair-set runner: exact ``{(i, j)}`` over the inputs,
+    any buffer sizing / overflow retry handled inside.  ``dims`` lists the
+    supported spatial dimensionalities (``None`` = any d ≥ 1); ``dtypes``
+    the endpoint dtypes the path accepts; ``stateful`` marks paths that
+    maintain persistent state (the runner then builds fresh state per
+    call, and the engine additionally goes through the churn harness).
+    """
+
+    name: str
+    pairs: Callable[[Extents, Extents], PairSet]
+    dims: Optional[Tuple[int, ...]] = None
+    dtypes: Tuple[str, ...] = ("float32",)
+    stateful: bool = False
+
+    def supports(self, d: int) -> bool:
+        return self.dims is None or d in self.dims
+
+
+_REGISTRY: Dict[str, MatchEngine] = {}
+_BUILTIN_DONE = False
+
+
+def register(engine: MatchEngine) -> MatchEngine:
+    """Add an engine to the registry (conformance-tested from now on)."""
+    if engine.name in _REGISTRY:
+        raise ValueError(f"engine {engine.name!r} already registered")
+    _REGISTRY[engine.name] = engine
+    return engine
+
+
+def unregister(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def all_engines() -> Dict[str, MatchEngine]:
+    """name → engine, built-ins auto-discovered on first use."""
+    _ensure_builtin()
+    return dict(_REGISTRY)
+
+
+def get_engine(name: str) -> MatchEngine:
+    _ensure_builtin()
+    return _REGISTRY[name]
+
+
+def engines_for(d: int, names=None) -> List[MatchEngine]:
+    """Engines supporting spatial dimensionality ``d`` (optionally by name)."""
+    sel = all_engines()
+    if names is not None:
+        sel = {n: e for n, e in sel.items() if n in set(names)}
+    return [e for _, e in sorted(sel.items()) if e.supports(d)]
+
+
+def pairs_via_retry(fn, subs: Extents, upds: Extents, *,
+                    start_cap: int = 64) -> PairSet:
+    """Run an enumeration ``fn(subs, upds, max_pairs=c) -> (buffer, count)``
+    through the repo-wide overflow contract: ``count > max_pairs`` means
+    the buffer was short — retry with a pow2 buffer of at least ``count``
+    (for the selective d-dim sweep that is the generator candidate count,
+    whose retry yields the exact K)."""
+    from repro.core.enumerate import round_up_pow2
+
+    cap = start_cap
+    for _ in range(10):
+        buf, count = fn(subs, upds, max_pairs=cap)
+        c = int(count)
+        if c <= cap:
+            got = oracles.pair_set(buf)
+            if len(got) != c:
+                raise AssertionError(
+                    f"buffer holds {len(got)} pairs but count says {c}")
+            return got
+        cap = round_up_pow2(max(c, cap + 1))
+    raise RuntimeError("enumeration never satisfied count <= max_pairs")
+
+
+# ---------------------------------------------------------------------------
+# mismatch reporting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Mismatch:
+    """One engine disagreeing with the reference oracle on one workload."""
+
+    engine: str
+    subs: Extents
+    upds: Extents
+    got: PairSet
+    want: PairSet
+    context: str = ""
+
+    def describe(self) -> str:
+        extra = sorted(self.got - self.want)[:5]
+        missing = sorted(self.want - self.got)[:5]
+        return (f"engine {self.engine!r}{self.context}: "
+                f"{len(self.got)} pairs vs reference {len(self.want)} "
+                f"(spurious {extra}, missing {missing})")
+
+
+def check_engine(engine: MatchEngine, subs: Extents, upds: Extents,
+                 want: Optional[PairSet] = None) -> Optional[Mismatch]:
+    """Grade one engine on one workload; None means conformant."""
+    if want is None:
+        want = oracles.reference_pairs(subs, upds)
+    got = engine.pairs(subs, upds)
+    if got == want:
+        return None
+    return Mismatch(engine=engine.name, subs=subs, upds=upds,
+                    got=got, want=want)
+
+
+# ---------------------------------------------------------------------------
+# built-in engines (auto-discovered on first registry read)
+# ---------------------------------------------------------------------------
+
+def _np_sides(subs: Extents, upds: Extents):
+    """(b, d) numpy blocks + d — the bulk-API input layout."""
+    s_lo, s_hi = np.asarray(subs.lo), np.asarray(subs.hi)
+    u_lo, u_hi = np.asarray(upds.lo), np.asarray(upds.hi)
+    d = 1 if s_lo.ndim == 1 else s_lo.shape[0]
+    if s_lo.ndim == 2:
+        s_lo, s_hi, u_lo, u_hi = s_lo.T, s_hi.T, u_lo.T, u_hi.T
+    return s_lo, s_hi, u_lo, u_hi, d
+
+
+def _sequential_pairs(subs, upds):
+    return oracles.sequential_pairs(subs, upds)
+
+
+def _blocked_pairs(subs, upds):
+    from repro.core import enumerate_matches, enumerate_matches_ddim
+
+    if subs.ndim_space == 1:
+        return pairs_via_retry(
+            lambda s, u, max_pairs: enumerate_matches(
+                s, u, max_pairs=max_pairs, block=32), subs, upds)
+    return pairs_via_retry(
+        lambda s, u, max_pairs: enumerate_matches_ddim(
+            s, u, max_pairs=max_pairs, method="blocked", block=32),
+        subs, upds)
+
+
+def _sweep_pairs(subs, upds):
+    from repro.core import enumerate_matches_ddim, sbm_enumerate
+
+    if subs.ndim_space == 1:
+        return pairs_via_retry(
+            lambda s, u, max_pairs: sbm_enumerate(s, u, max_pairs=max_pairs),
+            subs, upds)
+    return pairs_via_retry(
+        lambda s, u, max_pairs: enumerate_matches_ddim(
+            s, u, max_pairs=max_pairs, method="sweep"), subs, upds)
+
+
+def _sweep_gen0_pairs(subs, upds):
+    """The legacy dim-0-generator composition — kept honest as an engine."""
+    from repro.core import enumerate_matches_ddim
+
+    return pairs_via_retry(
+        lambda s, u, max_pairs: enumerate_matches_ddim(
+            s, u, max_pairs=max_pairs, method="sweep", generator_dim=0),
+        subs, upds)
+
+
+def _sweep_pallas_pairs(subs, upds):
+    from repro.kernels import sbm_enumerate_kernel
+
+    if subs.size == 0 or upds.size == 0:
+        return set()     # kernel grids need a nonempty endpoint stream
+    return pairs_via_retry(
+        lambda s, u, max_pairs: sbm_enumerate_kernel(
+            s, u, max_pairs=max_pairs, block_size=256), subs, upds)
+
+
+def _bitmatrix_pairs(subs, upds):
+    from repro.core import bitmatrix_enumerate
+
+    return pairs_via_retry(
+        lambda s, u, max_pairs: bitmatrix_enumerate(s, u, max_pairs=max_pairs),
+        subs, upds)
+
+
+def _bitmatrix_pallas_pairs(subs, upds):
+    from repro.kernels import sbm_bitmatrix_kernel
+
+    if subs.size == 0 or upds.size == 0:
+        return set()     # kernel grids need nonempty extent sets
+    return pairs_via_retry(
+        lambda s, u, max_pairs: sbm_bitmatrix_kernel(
+            s, u, max_pairs=max_pairs, block_n=128), subs, upds)
+
+
+def _incremental_pairs(subs, upds):
+    """Fresh IncrementalIndex, one bulk add batch, all_pairs()."""
+    from repro.core import IncrementalIndex
+
+    s_lo, s_hi, u_lo, u_hi, d = _np_sides(subs, upds)
+    idx = IncrementalIndex(dims=d, capacity=4)   # growth exercised every call
+    adds = {}
+    if s_lo.shape[0]:
+        adds["sub"] = (np.arange(s_lo.shape[0], dtype=np.int64), s_lo, s_hi)
+    if u_lo.shape[0]:
+        adds["upd"] = (np.arange(u_lo.shape[0], dtype=np.int64), u_lo, u_hi)
+    if adds:
+        idx.apply_batch_arrays(adds=adds, want_delta=False)
+    return idx.all_pairs()
+
+
+def _service_pairs(subs, upds):
+    """Fresh DDMService, bulk registration, cache read — rids mapped back
+    to input indices through the returned id arrays."""
+    from repro.core import DDMService
+
+    s_lo, s_hi, u_lo, u_hi, d = _np_sides(subs, upds)
+    svc = DDMService(dims=d, capacity=4)
+    sids = svc.register_subscriptions(s_lo, s_hi)
+    uids = svc.register_updates(u_lo, u_hi)
+    inv_s = {int(r): i for i, r in enumerate(sids)}
+    inv_u = {int(r): j for j, r in enumerate(uids)}
+    return {(inv_s[a], inv_u[b]) for a, b in svc.all_pairs()}
+
+
+def _ensure_builtin() -> None:
+    global _BUILTIN_DONE
+    if _BUILTIN_DONE:
+        return
+    _BUILTIN_DONE = True
+    register(MatchEngine("sequential_numpy", _sequential_pairs))
+    register(MatchEngine("blocked", _blocked_pairs))
+    register(MatchEngine("sweep", _sweep_pairs))
+    register(MatchEngine("sweep_gen0", _sweep_gen0_pairs, dims=(2, 3, 4)))
+    register(MatchEngine("sweep_pallas", _sweep_pallas_pairs, dims=(1,)))
+    register(MatchEngine("bitmatrix", _bitmatrix_pairs))
+    register(MatchEngine("bitmatrix_pallas", _bitmatrix_pallas_pairs))
+    register(MatchEngine("incremental_index", _incremental_pairs,
+                         stateful=True))
+    register(MatchEngine("ddm_service", _service_pairs, stateful=True))
+
+
+# ---------------------------------------------------------------------------
+# churn runners: one script, every delta implementation, plus the rebuild
+# ---------------------------------------------------------------------------
+
+CHURN_IMPLS = ("loop", "vector", "arrays")
+
+
+class _IndexChurnRunner:
+    """Drives tuple-format churn batches through one IncrementalIndex
+    surface.  ``impl='arrays'`` converts each batch to the side-grouped
+    array API (the vectorized bulk path); 'loop'/'vector' use the tuple
+    API with the corresponding ``delta_impl``."""
+
+    def __init__(self, impl: str, dims: int):
+        from repro.core import IncrementalIndex
+
+        self.impl = impl
+        delta_impl = "loop" if impl == "loop" else "vector"
+        self.idx = IncrementalIndex(dims=dims, capacity=4,
+                                    delta_impl=delta_impl)
+
+    def apply(self, adds, moves, removes):
+        if self.impl != "arrays":
+            return self.idx.apply_batch(adds=adds, moves=moves,
+                                        removes=removes)
+        grp_a, grp_m, grp_r = {}, {}, {}
+        for side in ("sub", "upd"):
+            sel = [(r, lo, hi) for s, r, lo, hi in adds if s == side]
+            if sel:
+                grp_a[side] = (np.asarray([r for r, _, _ in sel], np.int64),
+                               np.stack([np.atleast_1d(lo) for _, lo, _ in sel]),
+                               np.stack([np.atleast_1d(hi) for _, _, hi in sel]))
+            sel = [(r, lo, hi) for s, r, lo, hi in moves if s == side]
+            if sel:
+                grp_m[side] = (np.asarray([r for r, _, _ in sel], np.int64),
+                               np.stack([np.atleast_1d(lo) for _, lo, _ in sel]),
+                               np.stack([np.atleast_1d(hi) for _, _, hi in sel]))
+            sel = [r for s, r in removes if s == side]
+            if sel:
+                grp_r[side] = np.asarray(sel, np.int64)
+        return self.idx.apply_batch_arrays(adds=grp_a, moves=grp_m,
+                                           removes=grp_r)
+
+    def all_pairs(self):
+        return self.idx.all_pairs()
+
+
+def churn_runner(impl: str, dims: int) -> _IndexChurnRunner:
+    if impl not in CHURN_IMPLS:
+        raise ValueError(f"unknown churn impl {impl!r} (one of {CHURN_IMPLS})")
+    return _IndexChurnRunner(impl, dims)
+
+
+def check_churn_script(script, dims: int,
+                       impls=CHURN_IMPLS) -> List[str]:
+    """Drive one churn script through every delta implementation.
+
+    ``script`` is a list of ``(adds, moves, removes)`` batches in the
+    tuple format of :meth:`IncrementalIndex.apply_batch`.  After every
+    batch: all implementations' ``BatchDelta``s must be identical, the
+    delta-composed pair set must equal each implementation's
+    ``all_pairs()``, and (for d = 1) a from-scratch stateless sweep
+    rebuild over the mirrored live state.  Returns human-readable
+    divergence descriptions (empty = conformant).
+    """
+    runners = {impl: churn_runner(impl, dims) for impl in impls}
+    live = {"sub": {}, "upd": {}}
+    pairs: PairSet = set()
+    problems: List[str] = []
+    for step, (adds, moves, removes) in enumerate(script):
+        deltas = {impl: r.apply(adds, moves, removes)
+                  for impl, r in runners.items()}
+        for side, rid, lo, hi in adds + moves:
+            live[side][rid] = (np.atleast_1d(lo), np.atleast_1d(hi))
+        for side, rid in removes:
+            del live[side][rid]
+        base_impl = impls[0]
+        base = deltas[base_impl]
+        for impl, d in deltas.items():
+            if d != base:
+                problems.append(
+                    f"batch {step}: BatchDelta of {impl!r} != {base_impl!r}: "
+                    f"{d} vs {base}")
+        if base.added & base.removed:
+            problems.append(f"batch {step}: added ∩ removed non-empty")
+        pairs = (pairs - base.removed) | base.added
+        want = (oracles.sweep_rebuild_pairs(live["sub"], live["upd"])
+                if dims == 1
+                else oracles.live_pairs(live["sub"], live["upd"], dims))
+        if pairs != want:
+            problems.append(
+                f"batch {step}: delta-composed set drifted from rebuild "
+                f"(spurious {sorted(pairs - want)[:4]}, "
+                f"missing {sorted(want - pairs)[:4]})")
+        for impl, r in runners.items():
+            got = r.all_pairs()
+            if got != want:
+                problems.append(
+                    f"batch {step}: {impl!r}.all_pairs() != rebuild")
+        if problems:
+            break      # later steps run on diverged state — stop at first
+    return problems

@@ -1,0 +1,245 @@
+"""The conformance harness exercising itself and every registered engine
+(DESIGN.md §9): edge-case corpus over the full registry, metamorphic
+relations, churn equivalence across delta implementations, and the
+harness's own teeth — an injected off-by-one must be caught and shrunk to
+a minimal reproducer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+from repro.core.intervals import Extents
+from repro.testing import conformance, fuzz, metamorphic
+from repro.testing.shrink import ReproArtifact, shrink_script, shrink_workload
+
+jax.config.update("jax_platform_name", "cpu")
+
+ENGINE_NAMES = sorted(conformance.all_engines())
+
+
+def _mk(lo_s, hi_s, lo_u, hi_u, d):
+    def side(lo, hi):
+        lo = np.asarray(lo, np.float32).reshape(d, -1)
+        hi = np.asarray(hi, np.float32).reshape(d, -1)
+        if d == 1:
+            lo, hi = lo[0], hi[0]
+        return Extents(jnp.asarray(lo), jnp.asarray(hi))
+    return side(lo_s, hi_s), side(lo_u, hi_u)
+
+
+# the satellite edge-case corpus: every case hits all engines that
+# support its dimensionality (new engines are covered by registration)
+EDGE_CASES = {
+    "empty_subs_1d": _mk([], [], [0.0, 2.0], [1.0, 3.0], 1),
+    "empty_upds_1d": _mk([0.0], [1.0], [], [], 1),
+    "empty_both_2d": _mk([], [], [], [], 2),
+    "all_identical_1d": _mk([5.0] * 4, [7.0] * 4, [5.0] * 4, [7.0] * 4, 1),
+    "all_identical_3d": _mk([1.0] * 9, [2.0] * 9, [1.0] * 6, [2.0] * 6, 3),
+    "single_region_touch": _mk([0.0], [1.0], [1.0], [2.0], 1),
+    "single_region_miss": _mk([0.0], [1.0], [np.float32(1.0000001)], [2.0], 1),
+    "zero_width_points": _mk([0.0, 1.0, 2.0], [0.0, 1.0, 2.0],
+                             [1.0, 5.0], [1.0, 5.0], 1),
+    "equal_selectivity_2d": _mk([0.0, 2.0, 0.0, 2.0], [1.0, 3.0, 1.0, 3.0],
+                                [1.0, 0.0, 1.0, 0.0], [2.0, 4.0, 2.0, 4.0], 2),
+    "exact_tie_ladder": _mk([0.0, 1.0, 2.0, 3.0], [1.0, 2.0, 3.0, 4.0],
+                            [1.0, 3.0], [2.0, 3.0], 1),
+}
+
+
+@pytest.mark.parametrize("engine_name", ENGINE_NAMES)
+@pytest.mark.parametrize("case", sorted(EDGE_CASES))
+def test_engine_edge_cases(engine_name, case):
+    subs, upds = EDGE_CASES[case]
+    engine = conformance.get_engine(engine_name)
+    if not engine.supports(subs.ndim_space):
+        pytest.skip(f"{engine_name} does not support d={subs.ndim_space}")
+    mm = conformance.check_engine(engine, subs, upds)
+    assert mm is None, mm.describe()
+
+
+def test_registry_auto_discovers_every_pair_path():
+    """The conformance floor: one engine per pair-producing path in the
+    repo.  A new path must land here (by registering itself) or this
+    inventory is out of date."""
+    assert {"sequential_numpy", "blocked", "sweep", "sweep_gen0",
+            "sweep_pallas", "bitmatrix", "bitmatrix_pallas",
+            "incremental_index", "ddm_service"} <= set(ENGINE_NAMES)
+    with pytest.raises(ValueError, match="already registered"):
+        conformance.register(conformance.get_engine("sweep"))
+
+
+def test_registered_engine_is_conformance_tested_by_default():
+    """register() is the only step needed: engines_for picks the engine up
+    and the fuzzer grades it on the next seed."""
+    probe = conformance.MatchEngine(
+        "probe#identity", conformance.get_engine("sequential_numpy").pairs)
+    conformance.register(probe)
+    try:
+        assert any(e.name == "probe#identity"
+                   for e in conformance.engines_for(1))
+        subs, upds = EDGE_CASES["exact_tie_ladder"]
+        assert conformance.check_engine(probe, subs, upds) is None
+    finally:
+        conformance.unregister("probe#identity")
+
+
+# ---------------------------------------------------------------------------
+# metamorphic relations
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_name", ENGINE_NAMES)
+def test_metamorphic_relations_hold(engine_name):
+    engine = conformance.get_engine(engine_name)
+    rng = np.random.RandomState(7)
+    for d in (1, 3):
+        if not engine.supports(d):
+            continue
+        lo_s = rng.randint(0, 10, (d, 6)).astype(np.float32)
+        lo_u = rng.randint(0, 10, (d, 5)).astype(np.float32)
+        subs, upds = _mk(lo_s, lo_s + rng.randint(0, 4, (d, 6)),
+                         lo_u, lo_u + rng.randint(0, 4, (d, 5)), d)
+        violations = metamorphic.check_relations(engine.pairs, subs, upds)
+        assert violations == [], [str(v) for v in violations]
+
+
+def test_metamorphic_catches_translation_breakage():
+    """A runner that re-grades after a lossy shift must trip the relation
+    machinery (sanity: the relations are not vacuous)."""
+    def shifty(subs, upds):
+        base = conformance.get_engine("sequential_numpy").pairs(subs, upds)
+        if float(np.asarray(subs.lo).ravel()[0]) > 100.0:
+            return set(list(base)[:-1]) if base else base
+        return base
+    subs, upds = EDGE_CASES["exact_tie_ladder"]
+    v = metamorphic.check_translation(shifty, subs, upds)
+    assert v is not None and v.relation == "translation"
+
+
+# ---------------------------------------------------------------------------
+# stateful churn equivalence (satellite: loop vs vector vs arrays vs rebuild)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,dims", [(0, 1), (3, 1), (6, 2), (9, 3)])
+def test_churn_script_equivalence_seeded(seed, dims):
+    """Identical random churn scripts through delta_impl='loop', 'vector'
+    and the bulk arrays path: pair sets and composed BatchDeltas must agree
+    with each other and a stateless rebuild after every flush."""
+    rng = np.random.RandomState(seed)
+    script = fuzz.random_script(rng, dims, batches=8, max_ops=6)
+    problems = conformance.check_churn_script(script, dims)
+    assert problems == [], problems
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 2))
+    @settings(max_examples=15, deadline=None)
+    def test_property_churn_equivalence(seed, dims):
+        rng = np.random.RandomState(seed)
+        script = fuzz.random_script(rng, dims, batches=4, max_ops=4)
+        problems = conformance.check_churn_script(script, dims)
+        assert problems == [], problems
+
+
+@pytest.mark.parametrize("impl", conformance.CHURN_IMPLS)
+def test_batch_split_equivalence(impl):
+    """One flush vs many: same ops split into chunks must yield identical
+    state and composed deltas (metamorphic, stateful)."""
+    rng = np.random.RandomState(11)
+    for dims in (1, 2):
+        script = fuzz.random_script(rng, dims, batches=2, max_ops=6)
+        v = metamorphic.check_batch_split(dims, script[0], script[1],
+                                          impl=impl)
+        assert v is None, str(v)
+
+
+def test_duplicate_rid_batches_rejected():
+    assert fuzz.probe_duplicate_rid(1) == []
+    assert fuzz.probe_duplicate_rid(2) == []
+
+
+# ---------------------------------------------------------------------------
+# the harness's own teeth: injected bug → caught → shrunk → artifact
+# ---------------------------------------------------------------------------
+
+def test_injected_tie_bug_caught_and_shrunk():
+    """Acceptance criterion: flipping the sweep's closed '<=' tie to '<'
+    (modelled as dropping single-point overlaps) is caught by the fuzzer
+    and shrunk to a reproducer of <= 6 regions."""
+    broken = fuzz.broken_open_interval_engine()
+    _, failures = fuzz.run_fuzz(12, engine_names=[], smoke=True,
+                                extra_engines={broken.name: broken},
+                                verbose=False)
+    caught = [f for f in failures if f.artifact.kind == "pairs"]
+    assert caught, "injected off-by-one escaped the fuzzer"
+    best = min(f.artifact.region_count() for f in caught)
+    assert best <= 6, f"shrunk repro still has {best} regions"
+
+
+def test_shrink_workload_minimizes_to_witness():
+    """ddmin must strip every region not needed to witness the failure."""
+    rng = np.random.RandomState(3)
+    lo_s = rng.randint(0, 50, 30).astype(np.float32)
+    lo_u = rng.randint(0, 50, 30).astype(np.float32)
+    subs, upds = _mk(lo_s, lo_s + 2.0, lo_u, lo_u + 2.0, 1)
+
+    def failing(s, u):
+        # "fails" whenever sub 0's extent is present: everything else noise
+        lo = np.atleast_1d(np.asarray(s.lo))
+        return bool(np.any(lo == lo_s[0]))
+
+    s2, u2 = shrink_workload(subs, upds, failing)
+    assert s2.size == 1 and u2.size <= 1
+
+
+def test_shrink_script_respects_legality():
+    """Dropping an add whose rid is later moved would make the script
+    illegal — the engine raises, the predicate wrapper treats that as
+    not-failing, so ddmin keeps the add."""
+    lo, hi = np.zeros(1, np.float32), np.ones(1, np.float32)
+    script = [
+        ([("sub", 0, lo, hi), ("upd", 0, lo, hi)], [], []),
+        ([("sub", 1, lo, hi)], [("sub", 0, lo, hi * 2)], []),
+    ]
+
+    def failing(sc):
+        # the "bug" is witnessed by any script that still moves sub 0
+        for adds, moves, removes in sc:
+            for side, rid, *_ in moves:
+                if (side, rid) == ("sub", 0):
+                    # run it for real so illegal scripts raise
+                    r = conformance.churn_runner("vector", 1)
+                    for a, m, x in sc:
+                        r.apply(a, m, x)
+                    return True
+        return False
+
+    shrunk = shrink_script(script, failing)
+    flat = [(s, r) for a, m, _ in shrunk for s, r, *_ in a + m]
+    assert ("sub", 0) in flat                    # the add survived
+    assert all(rid == 0 for _, rid in flat)      # noise ops dropped
+
+
+def test_repro_artifact_roundtrip_and_pytest_snippet():
+    subs, upds = EDGE_CASES["single_region_touch"]
+    art = ReproArtifact.from_workload(
+        "sweep", "pairs", 42, "detail", subs, upds,
+        want={(0, 0)}, got=set())
+    # JSON roundtrip restores the exact workload
+    art2 = ReproArtifact(**__import__("json").loads(art.to_json()))
+    s2, u2 = art2.workload()
+    assert np.array_equal(np.asarray(s2.lo), np.asarray(subs.lo))
+    assert art2.region_count() == 2
+    # the pytest snippet is valid python and self-contained
+    code = art.to_pytest()
+    ns = {}
+    exec(compile(code, "<repro>", "exec"), ns)
+    fn = next(v for k, v in ns.items() if k.startswith("test_repro_"))
+    fn()                     # the sweep is conformant → the assert holds
+
+
+def test_fuzz_smoke_runs_green():
+    """The CI entry point, in miniature: a few seeds over every engine."""
+    checks, failures = fuzz.run_fuzz(4, smoke=True, verbose=False)
+    assert checks > 0
+    assert failures == [], [str(f) for f in failures]

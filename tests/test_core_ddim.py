@@ -14,15 +14,15 @@ from repro.core import (
     bitmatrix_count,
     bitmatrix_enumerate,
     bitmatrix_words,
-    brute_force_pairs_numpy,
     enumerate_matches_ddim,
     make_tall_thin_workload,
     per_dimension_counts,
     select_dimension,
-    sequential_sbm_pairs_numpy_ddim,
 )
 from repro.core.enumerate import round_up_pow2
 from repro.data.synthetic import DDM_WORKLOADS, ddm_workload
+from repro.testing.oracles import pair_set as _pset
+from repro.testing.oracles import reference_pairs, sequential_pairs
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -33,16 +33,12 @@ def _mk(lo_s, hi_s, lo_u, hi_u):
     return subs, upds
 
 
-def _pset(pairs):
-    return {(int(i), int(j)) for i, j in np.asarray(pairs) if i >= 0}
-
-
 def _check_all_engines(subs, upds, *, gen_dims=(None,)):
-    """Every d-dim engine returns exactly the brute-force pair set, for the
+    """Every d-dim engine returns exactly the reference pair set, for the
     auto-selected generator dimension and any pinned one."""
-    want = brute_force_pairs_numpy(subs, upds)
-    for sweep_dim in range(subs.ndim_space):
-        assert sequential_sbm_pairs_numpy_ddim(subs, upds, sweep_dim) == want
+    want = reference_pairs(subs, upds)
+    for sweep_dim in range(1, subs.ndim_space):
+        assert sequential_pairs(subs, upds, sweep_dim) == want
     counts = per_dimension_counts(subs, upds)
     cap = round_up_pow2(max(max(counts), 1))
     for gen in gen_dims:
@@ -123,7 +119,7 @@ def test_tall_thin_buffer_proportional_to_final_k():
     n = m = 64
     subs, upds = make_tall_thin_workload(jax.random.PRNGKey(3), n, m,
                                          alpha=8.0, d=2, length=1000.0)
-    want = brute_force_pairs_numpy(subs, upds)
+    want = reference_pairs(subs, upds)
     gen, counts = select_dimension(subs, upds)
     assert counts[0] == n * m          # dim 0 is non-selective by design
     assert gen == 1 and counts[1] < n * m // 4
@@ -179,7 +175,7 @@ def test_generator_overflow_returns_needed_capacity():
     check-and-retry loop then sizes a buffer that yields the exact K."""
     subs, upds = make_tall_thin_workload(jax.random.PRNGKey(12), 32, 32,
                                          alpha=12.0, d=2, length=1000.0)
-    want = brute_force_pairs_numpy(subs, upds)
+    want = reference_pairs(subs, upds)
     gen, counts = select_dimension(subs, upds)
     short = max(counts[gen] // 4, 1)
     assert short < counts[gen]
@@ -193,7 +189,7 @@ def test_generator_overflow_returns_needed_capacity():
 def test_bitmatrix_overflow_still_counts():
     subs, upds = _mk([[0.0] * 4, [0.0] * 4], [[1.0] * 4, [1.0] * 4],
                      [[0.5] * 4, [0.5] * 4], [[2.0] * 4, [2.0] * 4])
-    want = brute_force_pairs_numpy(subs, upds)
+    want = reference_pairs(subs, upds)
     assert len(want) == 16
     pairs, count = bitmatrix_enumerate(subs, upds, max_pairs=5)
     assert int(count) == 16            # exact K despite the short buffer
@@ -211,7 +207,7 @@ def test_bitmatrix_words_match_unpacked_mask():
     subs, upds = _mk(lo_s, hi_s, lo_u, hi_u)
     words = np.asarray(bitmatrix_words(subs, upds))
     assert words.shape == (n, -(-m // 32))
-    want = brute_force_pairs_numpy(subs, upds)
+    want = reference_pairs(subs, upds)
     got = {(i, j) for i in range(n) for j in range(m)
            if (words[i, j // 32] >> (j % 32)) & 1}
     assert got == want
@@ -243,8 +239,7 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=30, deadline=None)
     def test_property_ddim_engines_equal_sequential_reference(data):
         subs, upds = _mk(*data)
-        want = sequential_sbm_pairs_numpy_ddim(subs, upds)
-        assert want == brute_force_pairs_numpy(subs, upds)
+        want = reference_pairs(subs, upds)   # cross-checks both host refs
         counts = per_dimension_counts(subs, upds)
         cap = round_up_pow2(max(max(counts), 1))
         pairs, count = enumerate_matches_ddim(subs, upds, max_pairs=cap)

@@ -4,58 +4,17 @@ interleaving of add/move/remove batches leaves the delta-composed pair set
 equal to a from-scratch enumeration over the live regions (including ties,
 zero-length intervals and rid reuse)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (
-    DDMService,
-    Extents,
-    IncrementalIndex,
-    brute_force_pairs_numpy,
-    sbm_enumerate,
+from repro.core import DDMService, IncrementalIndex
+from repro.testing.oracles import (
+    live_pairs as _oracle_pairs,
+    service_pairs as _service_oracle,
+    sweep_rebuild_pairs as _sweep_oracle_pairs,
 )
-from repro.core.sweep import sequential_sbm_pairs_numpy
 
 jax.config.update("jax_platform_name", "cpu")
-
-
-# ---------------------------------------------------------------------------
-# oracles
-# ---------------------------------------------------------------------------
-
-def _live_extents(live, dims):
-    """dict rid → (lo, hi) → (sorted rids, Extents) with float32 bounds."""
-    ids = sorted(live)
-    lo = np.asarray([live[r][0] for r in ids], np.float32).T
-    hi = np.asarray([live[r][1] for r in ids], np.float32).T
-    if dims == 1:
-        lo, hi = lo.reshape(-1), hi.reshape(-1)
-    return ids, Extents(jnp.asarray(lo), jnp.asarray(hi))
-
-
-def _oracle_pairs(live_s, live_u, dims):
-    """Brute-force pair set over live regions, in rid space."""
-    if not live_s or not live_u:
-        return set()
-    sids, subs = _live_extents(live_s, dims)
-    uids, upds = _live_extents(live_u, dims)
-    return {(sids[i], uids[j])
-            for i, j in brute_force_pairs_numpy(subs, upds)}
-
-
-def _sweep_oracle_pairs(live_s, live_u):
-    """From-scratch sbm_enumerate over live regions (1-d), in rid space —
-    the acceptance-criterion oracle."""
-    if not live_s or not live_u:
-        return set()
-    sids, subs = _live_extents(live_s, 1)
-    uids, upds = _live_extents(live_u, 1)
-    want_k = len(sequential_sbm_pairs_numpy(subs, upds))
-    pairs, count = sbm_enumerate(subs, upds, max_pairs=max(want_k, 1) + 8)
-    assert int(count) == want_k
-    arr = np.asarray(pairs)
-    return {(sids[int(i)], uids[int(j)]) for i, j in arr if i >= 0}
 
 
 def _random_batch(rng, live, next_rid, dims, max_ops=5, integer=True):
@@ -419,21 +378,6 @@ def test_index_bulk_delta_exact_in_sort_regime(monkeypatch):
 # ---------------------------------------------------------------------------
 # DDMService churn sequences (satellite: oracle check after EVERY batch)
 # ---------------------------------------------------------------------------
-
-def _service_oracle(svc):
-    """From-scratch sequential Algorithm-4 sweep over the live tables."""
-    sl = svc._subs.live_ids()
-    ul = svc._upds.live_ids()
-    if sl.size == 0 or ul.size == 0:
-        return set()
-    subs = svc._subs.compact(sl)
-    upds = svc._upds.compact(ul)
-    if svc.dims > 1:
-        want = brute_force_pairs_numpy(subs, upds)
-    else:
-        want = sequential_sbm_pairs_numpy(subs, upds)
-    return {(int(sl[i]), int(ul[j])) for i, j in want}
-
 
 @pytest.mark.parametrize("seed,dims", [(0, 1), (1, 1), (2, 2), (3, 1)])
 def test_service_churn_sequences_vs_sequential_sweep(seed, dims):

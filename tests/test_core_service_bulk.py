@@ -7,24 +7,12 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import DDMService, brute_force_pairs_numpy
+from repro.core import DDMService
 from repro.core.incremental import SUB
 from repro.core.service import _RegionTable
-from repro.core.sweep import sequential_sbm_pairs_numpy
+from repro.testing.oracles import service_pairs as _oracle
 
 jax.config.update("jax_platform_name", "cpu")
-
-
-def _oracle(svc):
-    sl = svc._subs.live_ids()
-    ul = svc._upds.live_ids()
-    if sl.size == 0 or ul.size == 0:
-        return set()
-    subs = svc._subs.compact(sl)
-    upds = svc._upds.compact(ul)
-    want = (sequential_sbm_pairs_numpy(subs, upds) if svc.dims == 1
-            else brute_force_pairs_numpy(subs, upds))
-    return {(int(sl[i]), int(ul[j])) for i, j in want}
 
 
 # ---------------------------------------------------------------------------
@@ -115,23 +103,36 @@ def test_bulk_accepts_1d_vectors_for_dims1():
 
 
 def test_bulk_validation_leaves_no_debris():
+    """Errors must name the offending row/rid (satellite: no bare
+    ValueErrors) and leave no partial state behind."""
     svc = DDMService(dims=2, capacity=8)
-    with pytest.raises(ValueError):                 # lo > hi in the block
-        svc.register_subscriptions(np.array([[0.0, 5.0]]),
-                                   np.array([[1.0, 2.0]]))
-    with pytest.raises(ValueError):                 # wrong width
+    with pytest.raises(ValueError,                  # lo > hi in the block
+                       match=r"malformed region at row 1\b"):
+        svc.register_subscriptions(np.array([[0.0, 1.0], [0.0, 5.0]]),
+                                   np.array([[1.0, 2.0], [1.0, 2.0]]))
+    with pytest.raises(ValueError, match=r"must be \(b, 2\)"):  # wrong width
         svc.register_updates(np.zeros((3, 3)), np.ones((3, 3)))
-    with pytest.raises(ValueError):                 # NaN fails lo <= hi
+    with pytest.raises(ValueError,                  # NaN fails lo <= hi
+                       match=r"malformed region at row 0\b"):
         svc.register_updates(np.array([[np.nan, 0.0]]),
                              np.array([[1.0, 1.0]]))
     sids = svc.register_subscriptions(np.zeros((2, 2)), np.ones((2, 2)))
-    with pytest.raises(KeyError):                   # dead rid in bulk move
+    with pytest.raises(KeyError,                    # dead rid in bulk move
+                       match=r"region 99 not registered"):
         svc.move_subscriptions(np.array([int(sids[0]), 99]),
                                np.zeros((2, 2)), np.ones((2, 2)))
-    with pytest.raises(ValueError):                 # repeated rid in one call
+    with pytest.raises(ValueError,                  # repeated rid in one call
+                       match=rf"region {int(sids[0])} repeated"):
         svc.unregister_subscriptions(np.array([int(sids[0]), int(sids[0])]))
-    with pytest.raises(ValueError):                 # rids/bounds mismatch
+    with pytest.raises(ValueError,                  # rids/bounds mismatch
+                       match=r"2 rids but bounds for 3 regions"):
         svc.move_subscriptions(sids, np.zeros((3, 2)), np.ones((3, 2)))
+    # a malformed *move* knows which rid each row belongs to — the message
+    # must carry it, not just the row index
+    with pytest.raises(ValueError,
+                       match=rf"row 1 \(rid {int(sids[1])}\)"):
+        svc.move_subscriptions(sids, np.array([[0.0, 0.0], [0.0, 5.0]]),
+                               np.array([[1.0, 1.0], [1.0, 2.0]]))
     assert svc.match_count() == 0
     assert int(svc._subs.live.sum()) == 2           # only the good insert
 
