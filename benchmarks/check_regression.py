@@ -70,9 +70,29 @@ def _is_count(derived: str) -> bool:
     return derived.startswith(("K=", "pairs="))
 
 
+# Derived counters that must be ZERO in every fresh run, baseline or not:
+# the runtime executor's probe-seeded sizing makes retries structurally
+# impossible, and the shared pow2 ladder makes warmed reruns recompile-free
+# (repro/core/runtime.py).  A nonzero count is a planner/ladder regression
+# even if it is "fast".
+_ZERO_COUNTERS = ("retries", "recompiles")
+
+
+def _counter_failures(name: str, derived: str) -> int:
+    failures = 0
+    for token in str(derived).split(";"):
+        key, _, value = token.partition("=")
+        if key in _ZERO_COUNTERS and value.isdigit() and int(value) > 0:
+            print(f"FAIL     {name}: {key}={value} (executor must be {key}-free after warmup)")
+            failures += 1
+    return failures
+
+
 def compare(current: Dict, baseline: Dict, gate_timings: bool) -> int:
     failures = 0
     for name in sorted(set(current) | set(baseline)):
+        if name in current:
+            failures += _counter_failures(name, str(current[name]["derived"]))
         if name not in baseline:
             print(f"NEW      {name} (no baseline — informational)")
             continue

@@ -198,6 +198,13 @@ def bulk_smoke(rows: List[str]) -> None:
         d = deltas["vector"]
         rows.append(f"churn_bulk_smoke_b{b},0,"
                     f"pairs={len(d.added) + len(d.removed)}")
+    # regime audit: every bulk rematch above went through the planner's
+    # regime selection and recorded itself; the executor paths must have
+    # stayed retry-free (the derived counter re-gates this in CI)
+    st = twins["vector"].stats()
+    assert st["retries"] == 0, st
+    rows.append(f"churn_bulk_smoke_runtime,0,retries={st['retries']};"
+                f"regimes={'+'.join(sorted(st['by_regime']))}")
     bulk_sweep(rows, N_SMOKE, bulk_sizes=(1, 16, 128), reps=3)
 
 
@@ -215,6 +222,25 @@ def smoke(rows: List[str]) -> None:
     assert svc.all_pairs() == got, "delta path drifted from rebuild"
     assert got == service_pairs(svc), "delta path drifted from host oracle"
     rows.append(f"churn_smoke_n{N_SMOKE},0,pairs={len(got)}")
+
+    # runtime stats (DESIGN.md §10): rebuild sweeps are probe-seeded, so
+    # they are structurally retry-free, and two identical back-to-back
+    # rebuilds share one ladder bucket, so the second compiles nothing.
+    # Asserted here and re-gated in CI from the derived counters.
+    svc.invalidate_cache()
+    svc.all_pairs()                   # rebuild 1 (may compile its bucket)
+    svc.invalidate_cache()
+    svc.all_pairs()                   # rebuild 2: identical workload
+    last = svc.stats()["last"]
+    assert last["engine"] == "service_rebuild", last
+    assert last["retries"] == 0, f"retry on identical rebuild: {last}"
+    assert last["recompiles"] == 0, f"recompile after warmup: {last}"
+    ph = last["phase_seconds"]
+    rows.append(
+        f"churn_smoke_runtime_n{N_SMOKE},{sum(ph.values())*1e6:.1f},"
+        f"retries={last['retries']};recompiles={last['recompiles']};"
+        f"probe_us={ph.get('probe', 0.0)*1e6:.1f};"
+        f"emit_us={ph.get('emit', 0.0)*1e6:.1f}")
     single_move(rows, N_SMOKE, reps=5)
     move_fraction_sweep(rows, N_SMOKE, reps=3)
 

@@ -29,7 +29,7 @@ from repro.core import (bf_count, bitmatrix_count, bitmatrix_enumerate,
                         make_clustered_workload, make_uniform_workload,
                         rank_count, sbm_count, sbm_enumerate,
                         select_dimension)
-from repro.core.enumerate import round_up_pow2
+from repro.core.runtime import round_up_pow2
 from repro.core.sweep import sequential_sbm_count_numpy
 from repro.data.synthetic import ddm_workload
 
@@ -274,6 +274,36 @@ def smoke(rows: List[str]) -> None:
                                                      method="bitmatrix"))
     rows.append(f"ddim_smoke_selective_n{n2},{dt_sel*1e6:.1f},")
     rows.append(f"ddim_smoke_bitmatrix_n{n2},{dt_bm*1e6:.1f},")
+
+    # runtime executor stats (DESIGN.md §10): the planned paths are
+    # probe-seeded, so retries must be 0 on the second identical run, and
+    # with the count in the same pow2 ladder bucket the second run must
+    # compile nothing new.  Both invariants are asserted here AND emitted
+    # as derived counters so benchmarks/check_regression.py re-gates them
+    # from the BENCH JSON artifact.
+    from repro.core import enumerate_matches_ddim_planned, sbm_enumerate_planned
+
+    def _runtime_row(name, stats):
+        ph = stats.phase_seconds
+        rows.append(
+            f"{name},{sum(ph.values())*1e6:.1f},"
+            f"retries={stats.retries};recompiles={stats.recompiles};"
+            f"probe_us={ph.get('probe', 0.0)*1e6:.1f};"
+            f"emit_us={ph.get('emit', 0.0)*1e6:.1f}")
+
+    _, c1, _ = sbm_enumerate_planned(subs, upds, num_segments=8)   # warmup
+    _, c2, st = sbm_enumerate_planned(subs, upds, num_segments=8)
+    assert int(c1) == int(c2) == k
+    assert st.retries == 0, f"retry on identical rerun: {st.as_dict()}"
+    assert st.recompiles == 0, f"recompile after warmup: {st.as_dict()}"
+    _runtime_row(f"runtime_smoke_sweep_n{n}", st)
+
+    _, cd1, _ = enumerate_matches_ddim_planned(subs2, upds2)       # warmup
+    _, cd2, std = enumerate_matches_ddim_planned(subs2, upds2)
+    assert int(cd1) == int(cd2) == len(want)
+    assert std.retries == 0, f"retry on identical rerun: {std.as_dict()}"
+    assert std.recompiles == 0, f"recompile after warmup: {std.as_dict()}"
+    _runtime_row(f"runtime_smoke_ddim_n{n2}", std)
 
 
 def run(rows: List[str]) -> None:

@@ -14,6 +14,8 @@ Public surface:
   enumerate_matches, match_matrix, ...     — oracle/structure reporting
   IncrementalIndex, BatchDelta             — persistent index + delta rematch
   DDMService                               — HLA-style service facade
+  execute_enumeration, pairs_via_retry     — planned/instrumented executor
+  CapacityPolicy, BulkRegimePolicy, ...    — the runtime planner (§10)
 """
 from repro.core.intervals import (
     Extents,
@@ -49,6 +51,7 @@ from repro.core.enumerate import (
     enumerate_matches,
     enumerate_matches_sweep_numpy,
     sbm_enumerate,
+    sbm_enumerate_planned,
     sbm_enumerate_sharded,
 )
 from repro.core.ddim import (
@@ -57,8 +60,22 @@ from repro.core.ddim import (
     bitmatrix_sharded,
     bitmatrix_words,
     enumerate_matches_ddim,
+    enumerate_matches_ddim_planned,
     per_dimension_counts,
     select_dimension,
+)
+from repro.core.runtime import (
+    BULK_REGIMES,
+    BulkRegimePolicy,
+    CapacityError,
+    CapacityPolicy,
+    MatchStats,
+    StatsRecorder,
+    execute_enumeration,
+    jit_compiles,
+    pairs_via_retry,
+    round_up_pow2,
+    select_bulk_regime,
 )
 from repro.core.matrix import (
     match_matrix,
@@ -83,8 +100,12 @@ __all__ = [
     "rank_count", "rank_count_sharded", "per_sub_match_counts",
     "per_upd_match_counts", "bf_count", "bf_count_sharded", "grid_count",
     "GridOverflowError",
-    "enumerate_matches", "enumerate_matches_ddim", "enumerate_matches_sweep_numpy",
-    "sbm_enumerate", "sbm_enumerate_sharded",
+    "enumerate_matches", "enumerate_matches_ddim",
+    "enumerate_matches_ddim_planned", "enumerate_matches_sweep_numpy",
+    "sbm_enumerate", "sbm_enumerate_planned", "sbm_enumerate_sharded",
+    "BULK_REGIMES", "BulkRegimePolicy", "CapacityError", "CapacityPolicy",
+    "MatchStats", "StatsRecorder", "execute_enumeration", "jit_compiles",
+    "pairs_via_retry", "round_up_pow2", "select_bulk_regime",
     "bitmatrix_count", "bitmatrix_enumerate", "bitmatrix_sharded",
     "bitmatrix_words", "per_dimension_counts", "select_dimension",
     "match_matrix", "match_matrix_ddim", "row_index_lists",

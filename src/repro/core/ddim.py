@@ -46,7 +46,9 @@ from repro.core.enumerate import (
     enumerate_matches,
     sbm_enumerate,
 )
+from repro.core import runtime as runtime_lib
 from repro.core.intervals import Extents, intersect_1d
+from repro.core.runtime import pad_axis as _pad_axis  # noqa: F401 — canonical
 from repro.core.sweep import sbm_count
 
 
@@ -55,21 +57,6 @@ def _dim_rows(e: Extents) -> Tuple[jax.Array, jax.Array]:
     if e.lo.ndim == 1:
         return e.lo[None, :], e.hi[None, :]
     return e.lo, e.hi
-
-
-def _pad_axis(lo: jax.Array, hi: jax.Array, multiple: int):
-    """Pad extent columns to a multiple with inert [+inf, -inf] sentinels
-    (every closed-interval test against a sentinel is False) — THE one
-    encoding of the inert-extent convention, shared by the sharded and
-    Pallas bit-matrix paths."""
-    pad = (-lo.shape[1]) % multiple
-    if pad == 0:
-        return lo, hi
-    d = lo.shape[0]
-    return (
-        jnp.concatenate([lo, jnp.full((d, pad), jnp.inf, lo.dtype)], axis=1),
-        jnp.concatenate([hi, jnp.full((d, pad), -jnp.inf, hi.dtype)], axis=1),
-    )
 
 
 # ---------------------------------------------------------------------------
@@ -204,6 +191,70 @@ def enumerate_matches_ddim(
     # size, so return it: callers see count > max_pairs, retry with that
     # capacity, and the retry returns the exact post-filter K.
     return pairs, jnp.where(cand > max_pairs, cand.astype(kept.dtype), kept)
+
+
+def enumerate_matches_ddim_planned(
+    subs: Extents,
+    upds: Extents,
+    *,
+    method: str = "sweep",
+    block: int = 256,
+    num_segments: int = 8,
+    generator_dim: Optional[int] = None,
+    policy: runtime_lib.CapacityPolicy = runtime_lib.DEFAULT_POLICY,
+    recorder: Optional[runtime_lib.StatsRecorder] = None,
+):
+    """Plan-aware d-dim enumeration: probe → plan → emit, instrumented.
+
+    The per-dimension counting sweeps double as the planner's selectivity
+    probe: the generator dimension's 1-d count is exactly the candidate
+    buffer the selective sweep needs, so ``max_pairs`` starts at its
+    ladder bucket and the run is structurally retry-free.  The bit-matrix
+    method probes the final d-dim K (popcount) instead — its buffer
+    bounds only the true match count.  Returns ``(pairs, count, stats)``
+    with the generator choice recorded as the stats ``regime``
+    (DESIGN.md §10).
+    """
+    import time as _time
+
+    if method not in ("sweep", "bitmatrix", "blocked"):
+        raise ValueError(f"unknown method {method!r}")
+    t0 = _time.perf_counter()
+    gen = generator_dim
+    if subs.size == 0 or upds.size == 0:
+        estimate = 0
+        regime = method
+    elif method == "bitmatrix":
+        estimate = int(bitmatrix_count(subs, upds))
+        regime = "bitmatrix"
+    elif subs.ndim_space == 1 or method == "blocked":
+        from repro.core.sweep import sbm_count_exact
+
+        if method == "sweep":
+            estimate = sbm_count_exact(subs, upds,
+                                       num_segments=num_segments)
+        else:
+            estimate = None
+        regime = method
+    else:
+        if gen is None:
+            gen, counts = select_dimension(subs, upds,
+                                           num_segments=num_segments)
+            estimate = counts[gen]
+        else:
+            estimate = int(sbm_count(subs.dim(gen), upds.dim(gen),
+                                     num_segments=num_segments))
+        regime = f"sweep_dim{gen}"
+    probe_s = _time.perf_counter() - t0
+
+    def fn(s, u, *, max_pairs):
+        return enumerate_matches_ddim(
+            s, u, max_pairs=max_pairs, block=block, method=method,
+            num_segments=num_segments, generator_dim=gen)
+
+    return runtime_lib.execute_enumeration(
+        fn, subs, upds, estimate=estimate, policy=policy, engine="ddim",
+        regime=regime, probe_seconds=probe_s, recorder=recorder)
 
 
 # ---------------------------------------------------------------------------

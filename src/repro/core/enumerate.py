@@ -32,16 +32,12 @@ import numpy as np
 from jax import lax
 
 from repro.core import prefix as prefix_lib
+from repro.core import runtime as runtime_lib
 from repro.core.intervals import Extents, intersect_1d
+from repro.core.runtime import round_up_pow2  # noqa: F401 — canonical ladder
 from repro.core.sweep import (_indicator_deltas, _pad_stream,
                               emission_rank_tables, encode_endpoints,
                               rank_tables_from_cumsums, resolve_cumsum)
-
-
-def round_up_pow2(k: int) -> int:
-    """Power-of-two ``max_pairs`` buckets: bounded jit recompiles as K
-    drifts between calls (service queries, benchmark sweeps)."""
-    return max(8, 1 << (k - 1).bit_length())
 
 
 def _count_dtype():
@@ -128,6 +124,41 @@ def sbm_enumerate(subs: Extents, upds: Extents, *, max_pairs: int,
         return _empty_result(max_pairs)
     return _sbm_enumerate_jit(subs, upds, max_pairs=max_pairs,
                               num_segments=num_segments, scan_impl=scan_impl)
+
+
+def sbm_enumerate_planned(subs: Extents, upds: Extents, *,
+                          num_segments: int = 8,
+                          scan_impl: str = "two_level",
+                          policy: runtime_lib.CapacityPolicy =
+                          runtime_lib.DEFAULT_POLICY,
+                          recorder: runtime_lib.StatsRecorder | None = None):
+    """Plan-aware sweep enumeration: probe → plan → emit, instrumented.
+
+    Runs the counting sweep as the planner's selectivity probe, sizes
+    ``max_pairs`` to the exact K's ladder bucket, and executes the
+    emission under the runtime's retry loop (structurally zero retries:
+    the probe count is exact).  Returns ``(pairs, count, stats)`` — the
+    production face of :func:`sbm_enumerate` (DESIGN.md §10).
+    """
+    from repro.core.sweep import probe_count
+
+    if subs.size == 0 or upds.size == 0:
+        stats = runtime_lib.MatchStats(engine="sweep", count=0, capacity=0)
+        stats.add_phase("probe", 0.0)
+        if recorder is not None:
+            recorder.record(stats)
+        return jnp.full((0, 2), -1, jnp.int32), jnp.int32(0), stats
+
+    k, probe_s = probe_count(subs, upds, num_segments=num_segments,
+                             scan_impl=scan_impl)
+
+    def fn(s, u, *, max_pairs):
+        return sbm_enumerate(s, u, max_pairs=max_pairs,
+                             num_segments=num_segments, scan_impl=scan_impl)
+
+    return runtime_lib.execute_enumeration(
+        fn, subs, upds, estimate=k, policy=policy, engine="sweep",
+        probe_seconds=probe_s, recorder=recorder)
 
 
 def sbm_enumerate_sharded(subs: Extents, upds: Extents, mesh, axis_name: str,

@@ -49,9 +49,12 @@ the rebuild path and the oracle every batch is property-tested against.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Iterable, List, NamedTuple, Optional, Set, Tuple
 
 import numpy as np
+
+from repro.core import runtime as runtime_lib
 
 SUB = "sub"
 UPD = "upd"
@@ -133,19 +136,10 @@ def _ragged_gather(starts: np.ndarray, counts: np.ndarray,
 
 
 # -- the stacked bulk rematch (DESIGN.md §6) --------------------------------
-# b·m below this: one dense numpy mask (lowest constant, no sort setup).
-# Measured on this container (EXPERIMENTS.md §Churn): dense beats the
-# sort path's fixed O(m·log m) setup up to ~6e6 mask elements.
-_DENSE_MASK_ELEMS = 1 << 22
-# b·m up to this: jitted JAX fused mask — all 4·d comparisons in one
-# multithreaded pass over the (b, m) block instead of 4·d numpy
-# temporaries; shapes are padded to powers of two so jit recompiles stay
-# bounded.  The band sits where dense and sort are tied (~2^22..2^23), so
-# XLA's thread pool decides it on many-core hosts and it costs nothing on
-# small ones.  Above the band, materializing and nonzero-scanning b·m
-# bools is the bottleneck no matter who computes the mask, and the
-# output-sensitive sort-based candidates path takes over.
-_JAX_MASK_ELEMS = 1 << 23
+# The dense/jax/sort thresholds live in the planner
+# (repro.core.runtime.BulkRegimePolicy, measured crossovers documented
+# there and in EXPERIMENTS.md §Churn) so the regimes can be forced and
+# audited via MatchStats instead of being buried module constants.
 
 _fused_mask = None     # lazily-built jitted kernel (keeps numpy-only paths
                        # free of a jax import at module load)
@@ -163,20 +157,11 @@ def _make_fused_mask():
     return mask
 
 
-def _round_up_pow2(n: int) -> int:
-    # one pow2-bucketing rule for the whole repo (enumerate.round_up_pow2);
-    # imported lazily so this host-numpy module stays jax-free until a
-    # batch actually reaches the fused-mask regime
-    from repro.core.enumerate import round_up_pow2
-    return round_up_pow2(n)
-
-
-def _pad_cols(a: np.ndarray, n: int, fill: float) -> np.ndarray:
-    if a.shape[1] == n:
-        return a
-    out = np.full((a.shape[0], n), fill, a.dtype)
-    out[:, :a.shape[1]] = a
-    return out
+# one pow2-bucketing rule and one padding helper for the whole repo —
+# runtime is import-light (no jax at module scope), so this host-numpy
+# module keeps its no-jax-at-import property
+_round_up_pow2 = runtime_lib.round_up_pow2
+_pad_cols = runtime_lib.pad_columns
 
 
 def _sorted_overlap_pairs(q_lo, q_hi, c_lo, c_hi):
@@ -224,22 +209,31 @@ def _sorted_overlap_pairs(q_lo, q_hi, c_lo, c_hi):
     return qi, cj
 
 
-def _bulk_overlap_pairs(q_lo, q_hi, c_lo, c_hi):
-    """(row, col) indices of every closed-interval overlap between b query
-    rectangles and m counterparts (both ``(d, ·)`` blocks), b·m-adaptive:
-    dense numpy mask → jitted JAX fused mask → sort-based candidates."""
+def _bulk_overlap_pairs(q_lo, q_hi, c_lo, c_hi,
+                        policy: runtime_lib.BulkRegimePolicy =
+                        runtime_lib.DEFAULT_BULK_POLICY):
+    """(row, col, regime) of every closed-interval overlap between b query
+    rectangles and m counterparts (both ``(d, ·)`` blocks).
+
+    The regime — dense numpy mask / jitted JAX fused mask / sort-based
+    candidates — is chosen by the planner
+    (:func:`repro.core.runtime.select_bulk_regime` on b·m under the
+    policy's thresholds; ``policy.force`` pins it), and its name is
+    returned so callers can report it in :class:`MatchStats`.
+    """
     b, m = q_lo.shape[1], c_lo.shape[1]
     if b == 0 or m == 0:
-        return np.zeros(0, np.int64), np.zeros(0, np.int64)
-    elems = b * m
-    if elems <= _DENSE_MASK_ELEMS:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64), "empty"
+    regime = runtime_lib.select_bulk_regime(b, m, policy)
+    if regime == "dense":
         mask = ((c_lo[0][None, :] <= q_hi[0][:, None]) &
                 (q_lo[0][:, None] <= c_hi[0][None, :]))
         for d in range(1, q_lo.shape[0]):
             mask &= ((c_lo[d][None, :] <= q_hi[d][:, None]) &
                      (q_lo[d][:, None] <= c_hi[d][None, :]))
-        return np.nonzero(mask)
-    if elems <= _JAX_MASK_ELEMS:
+        qi, cj = np.nonzero(mask)
+        return qi, cj, regime
+    if regime == "jax":
         global _fused_mask
         if _fused_mask is None:
             _fused_mask = _make_fused_mask()
@@ -253,8 +247,9 @@ def _bulk_overlap_pairs(q_lo, q_hi, c_lo, c_hi):
         # closed-interval test is vacuously true against ANY bounds), so
         # padded indices are filtered explicitly rather than trusted away.
         keep = (qi < b) & (cj < m)
-        return qi[keep], cj[keep]
-    return _sorted_overlap_pairs(q_lo, q_hi, c_lo, c_hi)
+        return qi[keep], cj[keep], regime
+    qi, cj = _sorted_overlap_pairs(q_lo, q_hi, c_lo, c_hi)
+    return qi, cj, regime
 
 
 @dataclasses.dataclass
@@ -294,7 +289,10 @@ class IncrementalIndex:
     """
 
     def __init__(self, dims: int = 1, capacity: int = 64,
-                 delta_impl: str = "vector"):
+                 delta_impl: str = "vector",
+                 regime_policy: Optional[
+                     runtime_lib.BulkRegimePolicy] = None,
+                 recorder: Optional[runtime_lib.StatsRecorder] = None):
         if dims < 1:
             raise ValueError(f"dims must be >= 1, got {dims}")
         if delta_impl not in ("vector", "loop"):
@@ -305,6 +303,10 @@ class IncrementalIndex:
         # "loop": the pre-vectorization per-region path, kept as the
         # benchmark reference and property-test cross-check
         self.delta_impl = delta_impl
+        # planner-owned bulk-rematch thresholds (force/audit via stats)
+        self.regime_policy = regime_policy or runtime_lib.DEFAULT_BULK_POLICY
+        self.recorder = recorder if recorder is not None \
+            else runtime_lib.StatsRecorder()
         cap = max(int(capacity), 1)
         self._lo = {s: np.full((dims, cap), np.inf, np.float32) for s in _SIDES}
         self._hi = {s: np.full((dims, cap), -np.inf, np.float32) for s in _SIDES}
@@ -703,9 +705,16 @@ class IncrementalIndex:
         rids = np.asarray(rids, np.int64)
         if lv.size == 0 or rids.size == 0:
             return set()
-        qi, cj = _bulk_overlap_pairs(
+        t0 = time.perf_counter()
+        qi, cj, regime = _bulk_overlap_pairs(
             self._lo[side][:, rids], self._hi[side][:, rids],
-            self._lo[other][:, lv], self._hi[other][:, lv])
+            self._lo[other][:, lv], self._hi[other][:, lv],
+            self.regime_policy)
+        stats = runtime_lib.MatchStats(
+            engine="incremental_bulk", regime=regime, count=int(qi.size),
+            capacity=int(qi.size), attempts=[int(qi.size)])
+        stats.add_phase("rematch", time.perf_counter() - t0)
+        self.recorder.record(stats)
         qs, cs = rids[qi], lv[cj]
         if side == SUB:
             return set(zip(qs.tolist(), cs.tolist()))

@@ -33,14 +33,15 @@ lifting runs in jitted JAX.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ddim as ddim_lib
-from repro.core import enumerate as enumerate_lib
 from repro.core import incremental as incr_lib
+from repro.core import runtime as runtime_lib
 from repro.core import sweep as sweep_lib
 from repro.core.incremental import SUB, UPD, BatchDelta, IncrementalIndex
 from repro.core.intervals import Extents
@@ -194,9 +195,6 @@ class _RegionTable:
                        jnp.asarray(self.hi[:, ids]))
 
 
-_round_up_pow2 = enumerate_lib.round_up_pow2
-
-
 class DDMService:
     """Data Distribution Management service backed by parallel SBM.
 
@@ -214,16 +212,42 @@ class DDMService:
     """
 
     def __init__(self, dims: int = 1, capacity: int = 4096,
-                 delta_impl: str = "vector"):
+                 delta_impl: str = "vector",
+                 policy: Optional[runtime_lib.CapacityPolicy] = None,
+                 regime_policy: Optional[
+                     runtime_lib.BulkRegimePolicy] = None):
         self.dims = dims
         self._subs = _RegionTable.create(dims, capacity)
         self._upds = _RegionTable.create(dims, capacity)
+        # one recorder for the whole service: rebuild sweeps and the
+        # index's bulk rematches land in the same stats() stream
+        self._recorder = runtime_lib.StatsRecorder()
+        self._policy = policy or runtime_lib.DEFAULT_POLICY
         self._index = IncrementalIndex(dims=dims, capacity=capacity,
-                                       delta_impl=delta_impl)
+                                       delta_impl=delta_impl,
+                                       regime_policy=regime_policy,
+                                       recorder=self._recorder)
         # pending[(side, rid)] ∈ {"add", "move", "remove"} — composed so a
         # rid reaches the index at most once per batch
         self._pending: Dict[Tuple[str, int], str] = {}
         self._match_cache: Optional[Set[Tuple[int, int]]] = None
+
+    def stats(self) -> Dict[str, object]:
+        """Execution-runtime observability snapshot (DESIGN.md §10).
+
+        Aggregated :class:`repro.core.runtime.MatchStats` over every
+        planned matching call the service issued — rebuild sweeps,
+        count queries and the incremental index's bulk rematches share
+        one recorder.  Keys: ``calls``, ``retries``, ``recompiles``,
+        ``by_engine``, ``by_regime`` and ``last`` (the most recent
+        call's full per-phase record).
+        """
+        return self._recorder.snapshot()
+
+    @property
+    def recorder(self) -> runtime_lib.StatsRecorder:
+        """The live :class:`StatsRecorder` behind :meth:`stats`."""
+        return self._recorder
 
     def _table(self, side: str) -> _RegionTable:
         return self._subs if side == SUB else self._upds
@@ -422,31 +446,55 @@ class DDMService:
         upds = self._upds.compact(ul)
         if self.dims == 1:
             return int(sweep_lib.sbm_count(subs, upds))
-        gen, counts = ddim_lib.select_dimension(subs, upds)
-        if counts[gen] == 0:
-            return 0
-        _, count = ddim_lib.enumerate_matches_ddim(
-            subs, upds, max_pairs=_round_up_pow2(counts[gen]),
-            method="sweep", generator_dim=gen)
+        _, count, _ = self._planned_sweep(subs, upds, engine="service_count")
         return int(count)   # scalar only — the pair buffer never leaves device
+
+    def _planned_sweep(self, subs: Extents, upds: Extents, *, engine: str):
+        """Probe → plan → emit over compacted live extents, instrumented.
+
+        The selectivity probe (1-d count, or the d-dim generator
+        selection) seeds the planner's initial capacity, so the executor's
+        retry loop is structurally retry-free — the invariant the CI bench
+        gate asserts.  Stats land in the service recorder under
+        ``engine``; d > 1 records the generator dimension as the regime.
+        """
+        t0 = time.perf_counter()
+        if self.dims == 1:
+            gen, k = 0, int(sweep_lib.sbm_count(subs, upds))
+            regime = "sweep_1d"
+        else:
+            gen, counts = ddim_lib.select_dimension(subs, upds)
+            k = counts[gen]
+            regime = f"sweep_dim{gen}"
+        probe_s = time.perf_counter() - t0
+        if k == 0:
+            stats = runtime_lib.MatchStats(engine=engine, regime=regime)
+            stats.add_phase("probe", probe_s)
+            self._recorder.record(stats)
+            return None, 0, stats
+
+        def fn(s, u, *, max_pairs):
+            return ddim_lib.enumerate_matches_ddim(
+                s, u, max_pairs=max_pairs, method="sweep",
+                generator_dim=gen)
+
+        return runtime_lib.execute_enumeration(
+            fn, subs, upds, estimate=k, policy=self._policy, engine=engine,
+            regime=regime, probe_seconds=probe_s, recorder=self._recorder)
 
     def _sweep_pairs(self, subs: Extents, upds: Extents):
         """(i, j) index pairs over compacted live extents via the sweep.
 
         d > 1: candidates come from the most selective projection
         (:func:`repro.core.ddim.select_dimension`), so ``max_pairs`` is a
-        power-of-two bucket over min_d K_d rather than the dim-0 count.
+        power-of-two bucket over min_d K_d rather than the dim-0 count —
+        all sizing now routed through the runtime planner
+        (:meth:`_planned_sweep`), surfaced via :meth:`stats`.
         """
-        if self.dims == 1:
-            gen, k = 0, int(sweep_lib.sbm_count(subs, upds))
-        else:
-            gen, counts = ddim_lib.select_dimension(subs, upds)
-            k = counts[gen]
-        if k == 0:
+        pairs, count, _ = self._planned_sweep(subs, upds,
+                                              engine="service_rebuild")
+        if pairs is None:
             return np.zeros(0, np.int64), np.zeros(0, np.int64), 0
-        pairs, count = ddim_lib.enumerate_matches_ddim(
-            subs, upds, max_pairs=_round_up_pow2(k), method="sweep",
-            generator_dim=gen)
         arr = np.asarray(pairs)
         arr = arr[arr[:, 0] >= 0]
         return arr[:, 0], arr[:, 1], int(count)

@@ -205,6 +205,24 @@ def sbm_count(subs: Extents, upds: Extents, *, num_segments: int = 8,
     return combine_lane_partials(a, b, c, d)
 
 
+def probe_count(subs: Extents, upds: Extents, *, num_segments: int = 8,
+                scan_impl: str = "two_level") -> tuple:
+    """Plan-aware counting sweep: ``(K, seconds)`` for the runtime planner.
+
+    The cheap selectivity probe of DESIGN.md §10 — one fused sort+count
+    pass whose exact K seeds :func:`repro.core.runtime.initial_capacity`
+    (so the follow-on enumeration needs zero retries) and whose wall time
+    becomes the ``probe`` phase of the call's
+    :class:`repro.core.runtime.MatchStats`.
+    """
+    import time
+
+    t0 = time.perf_counter()
+    k = sbm_count_exact(subs, upds, num_segments=num_segments,
+                        scan_impl=scan_impl)
+    return k, time.perf_counter() - t0
+
+
 def sbm_count_exact(subs: Extents, upds: Extents, *, num_segments: int = 8,
                     scan_impl: str = "two_level") -> int:
     """K as an exact Python int, valid beyond 2³¹ even without x64.

@@ -86,26 +86,22 @@ def engines_for(d: int, names=None) -> List[MatchEngine]:
 
 
 def pairs_via_retry(fn, subs: Extents, upds: Extents, *,
-                    start_cap: int = 64) -> PairSet:
+                    start_cap: int = 64, recorder=None) -> PairSet:
     """Run an enumeration ``fn(subs, upds, max_pairs=c) -> (buffer, count)``
-    through the repo-wide overflow contract: ``count > max_pairs`` means
-    the buffer was short — retry with a pow2 buffer of at least ``count``
-    (for the selective d-dim sweep that is the generator candidate count,
-    whose retry yields the exact K)."""
-    from repro.core.enumerate import round_up_pow2
+    through the repo-wide overflow contract.
 
-    cap = start_cap
-    for _ in range(10):
-        buf, count = fn(subs, upds, max_pairs=cap)
-        c = int(count)
-        if c <= cap:
-            got = oracles.pair_set(buf)
-            if len(got) != c:
-                raise AssertionError(
-                    f"buffer holds {len(got)} pairs but count says {c}")
-            return got
-        cap = round_up_pow2(max(c, cap + 1))
-    raise RuntimeError("enumeration never satisfied count <= max_pairs")
+    .. deprecated::
+        This is now a thin delegate of
+        :func:`repro.core.runtime.pairs_via_retry` — the count-then-retry
+        loop was promoted out of the test harness into the production
+        executor (DESIGN.md §10), so the conformance registry exercises
+        the exact code path the service runs.  New code should import it
+        from ``repro.core.runtime`` directly.
+    """
+    from repro.core import runtime as runtime_lib
+
+    return runtime_lib.pairs_via_retry(fn, subs, upds, start_cap=start_cap,
+                                       recorder=recorder)
 
 
 # ---------------------------------------------------------------------------

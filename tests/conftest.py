@@ -1,0 +1,20 @@
+"""Suite-wide fixtures.
+
+The tier-1 suite performs hundreds of XLA CPU compilations in one
+process; the jitted executables accumulate (every module-level ``jit``
+cache pins its code memory) and on small single-core containers the
+LLVM JIT has been observed to segfault on a *large* compile late in the
+run — reproducibly at whichever big compile comes after enough history,
+never when the same file runs alone.  Dropping the jit caches at each
+test-file boundary bounds that accumulation; within a file the caches
+stay warm, so warmup-then-measure tests (e.g. the recompile-regression
+tests in ``test_runtime.py``) are unaffected.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    jax.clear_caches()
+    yield

@@ -311,14 +311,13 @@ def test_index_array_api_tolerates_empty_groups():
     assert d.added == {(1, 0)}
 
 
-def test_infinite_extent_in_jax_mask_regime(monkeypatch):
+def test_infinite_extent_in_jax_mask_regime():
     """A legitimate (-inf, +inf) match-everything region also overlaps the
     fused-mask regime's pow2-padding sentinels — padded indices must be
     filtered, not emitted as out-of-range rids (regression)."""
-    import repro.core.incremental as incr
-    monkeypatch.setattr(incr, "_DENSE_MASK_ELEMS", 0)   # force the jax tier
-    monkeypatch.setattr(incr, "_JAX_MASK_ELEMS", 1 << 40)
-    idx = IncrementalIndex(dims=1)
+    from repro.core.runtime import BulkRegimePolicy
+    idx = IncrementalIndex(dims=1,
+                           regime_policy=BulkRegimePolicy(force="jax"))
     idx.apply_batch_arrays(adds={
         "sub": (np.array([0, 1, 2]),                    # 3 → pads to 4
                 np.array([-np.inf, 0.0, 50.0], np.float32),
@@ -334,10 +333,12 @@ def test_infinite_extent_in_jax_mask_regime(monkeypatch):
     assert d.added == {(2, 2)} and d.removed == set()
 
 
-def test_bulk_overlap_regimes_agree(monkeypatch):
+def test_bulk_overlap_regimes_agree():
     """dense-mask, jitted-JAX-mask and sort-based candidate regimes of
-    _bulk_overlap_pairs return identical pair sets (d = 1, 2, 3)."""
+    _bulk_overlap_pairs return identical pair sets (d = 1, 2, 3), and
+    each forced regime reports its own name."""
     import repro.core.incremental as incr
+    from repro.core.runtime import BULK_REGIMES, BulkRegimePolicy
     rng = np.random.RandomState(7)
     for d in (1, 2, 3):
         b, m = rng.randint(40, 90), rng.randint(50, 120)
@@ -346,24 +347,21 @@ def test_bulk_overlap_regimes_agree(monkeypatch):
         c_lo = rng.randint(0, 40, (d, m)).astype(np.float32)
         c_hi = c_lo + rng.randint(0, 10, (d, m))
         results = {}
-        for regime, (dense, jaxm) in {"dense": (1 << 40, 1 << 41),
-                                      "jax": (0, 1 << 40),
-                                      "sort": (0, 0)}.items():
-            monkeypatch.setattr(incr, "_DENSE_MASK_ELEMS", dense)
-            monkeypatch.setattr(incr, "_JAX_MASK_ELEMS", jaxm)
-            qi, cj = incr._bulk_overlap_pairs(q_lo, q_hi, c_lo, c_hi)
+        for regime in BULK_REGIMES:
+            qi, cj, got = incr._bulk_overlap_pairs(
+                q_lo, q_hi, c_lo, c_hi, BulkRegimePolicy(force=regime))
+            assert got == regime
             results[regime] = set(zip(qi.tolist(), cj.tolist()))
         assert results["dense"] == results["jax"] == results["sort"], d
 
 
-def test_index_bulk_delta_exact_in_sort_regime(monkeypatch):
+def test_index_bulk_delta_exact_in_sort_regime():
     """End-to-end churn correctness with the sort-based regime forced on
     (every rematch, however small, takes the searchsorted path)."""
-    import repro.core.incremental as incr
-    monkeypatch.setattr(incr, "_DENSE_MASK_ELEMS", 0)
-    monkeypatch.setattr(incr, "_JAX_MASK_ELEMS", 0)
+    from repro.core.runtime import BulkRegimePolicy
     rng = np.random.RandomState(9)
-    idx = IncrementalIndex(dims=1, capacity=4)
+    idx = IncrementalIndex(dims=1, capacity=4,
+                           regime_policy=BulkRegimePolicy(force="sort"))
     live = {"sub": {}, "upd": {}}
     next_rid = {"sub": 0, "upd": 0}
     pairs = set()

@@ -1,0 +1,214 @@
+"""The execution runtime (DESIGN.md §10): one pow2 ladder, one retry
+loop, instrumented stats.
+
+The planner's contract is *structural zero retries* — a probe-seeded
+estimate lands the first buffer at the exact ladder bucket — and
+*bounded recompiles* — every engine sizes through the same
+``round_up_pow2`` floor-8 ladder, so different workloads that share a
+bucket share a compiled executable.  These tests pin the edges of that
+contract (empty, exact-fit, overflow, hard cap), the recompile
+regression the ladder exists to prevent, and the conformance harness's
+delegation onto the production executor."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Extents, make_uniform_workload
+from repro.core import runtime
+from repro.core.ddim import enumerate_matches_ddim
+from repro.core.enumerate import sbm_enumerate, sbm_enumerate_planned
+from repro.core.incremental import IncrementalIndex
+from repro.core.intervals import brute_force_pairs_numpy
+from repro.core.service import DDMService
+from repro.testing import conformance
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _workload(n_sub=40, n_upd=60, d=1, seed=0, alpha=0.2):
+    return make_uniform_workload(
+        jax.random.PRNGKey(seed), n_sub, n_upd, alpha, d=d)
+
+
+def _sweep_fn(subs, upds, *, max_pairs):
+    return sbm_enumerate(subs, upds, max_pairs=max_pairs)
+
+
+# ---------------------------------------------------------------------------
+# The ladder
+
+
+def test_round_up_pow2_floor_and_buckets():
+    assert runtime.round_up_pow2(0) == 8
+    assert runtime.round_up_pow2(1) == 8
+    assert runtime.round_up_pow2(8) == 8
+    assert runtime.round_up_pow2(9) == 16
+    assert runtime.round_up_pow2(100) == 128
+    assert runtime.round_up_pow2(128) == 128
+    assert runtime.round_up_pow2(129) == 256
+
+
+def test_single_ladder_source():
+    """Every layer must import the one ladder, not redefine it."""
+    import repro.core.enumerate as enum_lib
+    import repro.core.incremental as incr_lib
+
+    assert enum_lib.round_up_pow2 is runtime.round_up_pow2
+    assert incr_lib._round_up_pow2 is runtime.round_up_pow2
+
+
+def test_same_bucket_estimates_share_compilation():
+    """Two planned runs whose estimates differ but share a pow2 bucket
+    must not trigger a new jit compilation on the second run — the
+    regression the shared ladder exists to prevent."""
+    subs, upds = _workload(80, 120, seed=3)
+    # Warm the bucket that both estimates round to.
+    _, k, _ = sbm_enumerate_planned(subs, upds)
+    bucket = runtime.round_up_pow2(int(k))
+    for est in (max(1, bucket // 2 + 1), bucket):
+        assert runtime.round_up_pow2(est) == bucket
+        before = runtime.jit_compiles()
+        buf, count, stats = runtime.execute_enumeration(
+            _sweep_fn, subs, upds, estimate=est, engine="sweep")
+        assert int(count) == int(k)
+        assert stats.retries == 0
+        assert stats.recompiles == 0
+        assert runtime.jit_compiles() - before == 0
+
+
+# ---------------------------------------------------------------------------
+# Planner edges
+
+
+def test_zero_capacity_with_nonzero_k_retries_to_exact():
+    subs, upds = _workload(seed=1)
+    want = brute_force_pairs_numpy(subs, upds)
+    assert want
+    buf, count, stats = runtime.execute_enumeration(
+        _sweep_fn, subs, upds, capacity=0, engine="sweep")
+    assert runtime.pair_set(buf) == want
+    assert int(count) == len(want)
+    assert stats.retries >= 1
+    assert stats.attempts[0] == 0
+    assert stats.capacity >= len(want)
+
+
+def test_exact_fit_no_spurious_retry():
+    """count == max_pairs satisfies the overflow contract: no retry."""
+    subs, upds = _workload(seed=2)
+    k = len(brute_force_pairs_numpy(subs, upds))
+    assert k > 0
+    buf, count, stats = runtime.execute_enumeration(
+        _sweep_fn, subs, upds, capacity=k, engine="sweep")
+    assert int(count) == k
+    assert stats.retries == 0
+    assert stats.capacity == k
+    assert stats.waste == 0
+
+
+def test_ddim_selective_candidate_overflow_retries_to_exact():
+    """The selective-dimension sweep's overflow count is the generator
+    *candidate* count (> K is possible); the retry must still converge
+    to the exact d-dim pair set."""
+    subs, upds = _workload(30, 40, d=3, seed=4)
+    want = brute_force_pairs_numpy(subs, upds)
+
+    def fn(s, u, *, max_pairs):
+        return enumerate_matches_ddim(s, u, max_pairs=max_pairs)
+
+    buf, count, stats = runtime.execute_enumeration(
+        fn, subs, upds, capacity=1, engine="ddim")
+    assert runtime.pair_set(buf) == want
+    assert int(count) == len(want)
+    assert stats.retries >= 1
+
+
+def test_hard_cap_raises_capacity_error():
+    subs, upds = _workload(seed=5)
+    k = len(brute_force_pairs_numpy(subs, upds))
+    assert k > 4
+    policy = runtime.CapacityPolicy(start_cap=4, hard_cap=4)
+    with pytest.raises(runtime.CapacityError):
+        runtime.execute_enumeration(
+            _sweep_fn, subs, upds, policy=policy, engine="sweep")
+
+
+def test_initial_capacity_seeds_bucket_and_clamps():
+    policy = runtime.CapacityPolicy(start_cap=64, hard_cap=512)
+    assert runtime.initial_capacity(None, policy) == 64
+    assert runtime.initial_capacity(100, policy) == 128
+    assert runtime.initial_capacity(10_000, policy) == 512
+
+
+def test_empty_workload_planned_zero_stats():
+    empty = Extents(np.zeros((0,), np.float32), np.zeros((0,), np.float32))
+    pairs, count, stats = sbm_enumerate_planned(empty, empty)
+    assert int(count) == 0
+    assert stats.retries == 0
+    assert "probe" in stats.phase_seconds
+
+
+# ---------------------------------------------------------------------------
+# Conformance delegation (the promoted test harness)
+
+
+def test_conformance_delegates_to_runtime():
+    subs, upds = _workload(seed=6)
+    rec_a, rec_b = runtime.StatsRecorder(), runtime.StatsRecorder()
+    via_conf = conformance.pairs_via_retry(
+        _sweep_fn, subs, upds, start_cap=8, recorder=rec_a)
+    via_runtime = runtime.pairs_via_retry(
+        _sweep_fn, subs, upds, start_cap=8, recorder=rec_b)
+    assert via_conf == via_runtime == brute_force_pairs_numpy(subs, upds)
+    sa, sb = rec_a.last, rec_b.last
+    assert (sa.count, sa.retries, sa.attempts) == (
+        sb.count, sb.retries, sb.attempts)
+    assert "deprecated" in (conformance.pairs_via_retry.__doc__ or "")
+
+
+# ---------------------------------------------------------------------------
+# Regime policy + stats plumbing (service / incremental layers)
+
+
+@pytest.mark.parametrize("regime", runtime.BULK_REGIMES)
+def test_bulk_regime_name_reported_in_stats(regime):
+    """Each forced bulk regime must stamp its own name into the
+    MatchStats it records — the audit knob satellite 6 asks for."""
+    idx = IncrementalIndex(
+        dims=1,
+        regime_policy=runtime.BulkRegimePolicy(force=regime),
+    )
+    rng = np.random.RandomState(0)
+    lo = rng.rand(12)
+    idx.apply_batch(adds=[("sub", r, lo[r], lo[r] + 0.3)
+                          for r in range(12)])
+    idx.apply_batch(adds=[("upd", r, lo[r] + 0.1, lo[r] + 0.4)
+                          for r in range(10)])
+    st = idx.recorder.last
+    assert st is not None
+    assert st.regime == regime
+    assert st.engine == "incremental_bulk"
+    assert regime in idx.recorder.snapshot()["by_regime"]
+
+
+def test_service_stats_surface():
+    svc = DDMService(dims=2)
+    rng = np.random.RandomState(1)
+    slo = rng.rand(25, 2).astype(np.float32)
+    ulo = rng.rand(35, 2).astype(np.float32)
+    svc.register_subscriptions(slo, slo + 0.4)
+    svc.register_updates(ulo, ulo + 0.4)
+    n_pairs = len(svc.all_pairs())
+    snap = svc.stats()
+    assert snap["calls"] >= 1
+    last = snap["last"]
+    assert last["engine"] == "service_rebuild"
+    assert last["count"] == n_pairs
+    assert last["retries"] == 0
+    assert last["regime"].startswith("sweep_dim")
+    assert set(last["phase_seconds"]) >= {"probe"}
+
+
+def test_bulk_policy_rejects_unknown_force():
+    with pytest.raises(ValueError):
+        runtime.BulkRegimePolicy(force="turbo")
