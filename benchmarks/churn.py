@@ -46,8 +46,8 @@ def _build_service(maker, n_each: int, alpha: float, seed: int) -> DDMService:
     u_lo = np.asarray(upds.lo)
     u_hi = np.asarray(upds.hi)
     for i in range(n_each):
-        svc.register_subscription([s_lo[i]], [s_hi[i]])
-        svc.register_update([u_lo[i]], [u_hi[i]])
+        svc.register("sub", float(s_lo[i]), float(s_hi[i]))
+        svc.register("upd", float(u_lo[i]), float(u_hi[i]))
     return svc
 
 
@@ -58,8 +58,8 @@ def _build_service_bulk(maker, n_each: int, alpha: float,
     of what the bulk axis measures."""
     subs, upds = maker(jax.random.PRNGKey(seed), n_each, n_each, alpha=alpha)
     svc = DDMService(dims=1, capacity=16)
-    svc.register_subscriptions(np.asarray(subs.lo), np.asarray(subs.hi))
-    svc.register_updates(np.asarray(upds.lo), np.asarray(upds.hi))
+    svc.register("sub", np.asarray(subs.lo), np.asarray(subs.hi))
+    svc.register("upd", np.asarray(upds.lo), np.asarray(upds.hi))
     assert int(svc._subs.live.sum()) == n_each
     assert int(svc._upds.live.sum()) == n_each
     return svc
@@ -70,7 +70,7 @@ def _random_move(svc: DDMService, rng, length=1.0e6, seg=10.0):
     ids = svc._upds.live_ids()
     rid = int(ids[rng.randint(ids.size)])
     lo = float(rng.uniform(0, length - seg))
-    svc.move_update(rid, [lo], [lo + seg])
+    svc.move("upd", rid, [lo], [lo + seg])
     return rid
 
 
@@ -153,7 +153,7 @@ def bulk_sweep(rows: List[str], n_each: int, bulk_sizes, reps: int) -> None:
             for _ in range(reps):
                 rids = rng.choice(svc._upds.live_ids(), size=b, replace=False)
                 lo = rng.uniform(0, 1.0e6 - seg, b).astype(np.float32)
-                svc.move_updates(rids, lo, lo + np.float32(seg))
+                svc.move("upd", rids, lo, lo + np.float32(seg))
                 t0 = time.perf_counter()
                 svc.flush()
                 t = min(t, time.perf_counter() - t0)
@@ -183,7 +183,7 @@ def bulk_smoke(rows: List[str]) -> None:
         deltas = {}
         for impl, svc in twins.items():
             before = svc.all_pairs()
-            svc.move_updates(rids, lo, lo + np.float32(seg))
+            svc.move("upd", rids, lo, lo + np.float32(seg))
             deltas[impl] = svc.flush()
             after = svc.all_pairs()
             assert deltas[impl].added == after - before, (impl, b)
@@ -258,15 +258,15 @@ def smoke(rows: List[str]) -> None:
     u_hi = np.asarray(upds2.hi)
     uids = []
     for i in range(n2):
-        svc2.register_subscription(s_lo[:, i], s_hi[:, i])
-        uids.append(svc2.register_update(u_lo[:, i], u_hi[:, i]))
+        svc2.register("sub", s_lo[:, i], s_hi[:, i])
+        uids.append(svc2.register("upd", u_lo[:, i], u_hi[:, i]))
     svc2.all_pairs()
     rng2 = np.random.RandomState(5)
     for _ in range(3):
         for _ in range(4):
             rid = uids[rng2.randint(n2)]
             lo = rng2.uniform(0, 9e5, 2).astype(np.float32)
-            svc2.move_update(rid, lo, lo + np.float32(1e4))
+            svc2.move("upd", rid, lo, lo + np.float32(1e4))
         svc2.flush()
     got2 = svc2.all_pairs()
     svc2.invalidate_cache()

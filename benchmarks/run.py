@@ -11,8 +11,8 @@ import sys
 import time
 from typing import List
 
-MODULES = ("matching", "churn", "scaling", "memory", "attention_bench",
-           "moe_bench", "context_parallel_bench")
+MODULES = ("matching", "churn", "frontend", "scaling", "memory",
+           "attention_bench", "moe_bench", "context_parallel_bench")
 
 
 def main() -> None:

@@ -44,9 +44,9 @@ def service_demo() -> None:
     print("\n== DDM service lifecycle (2-D regions) ==")
     svc = DDMService(dims=2, capacity=4096)
     rng = np.random.RandomState(0)
-    subs = [svc.register_subscription(lo, lo + rng.rand(2) * 10)
+    subs = [svc.register("sub", lo, lo + rng.rand(2) * 10)
             for lo in rng.rand(500, 2) * 100]
-    upds = [svc.register_update(lo, lo + rng.rand(2) * 10)
+    upds = [svc.register("upd", lo, lo + rng.rand(2) * 10)
             for lo in rng.rand(200, 2) * 100]
     print(f"registered {len(subs)} subscriptions, {len(upds)} updates")
     print(f"total matches: {svc.match_count()}")
@@ -59,7 +59,7 @@ def service_demo() -> None:
 
     # dynamic DDM: an agent moves across the space
     before = len(svc.matches_for_update(u))
-    svc.move_update(u, [0, 0], [100, 100])   # grows to cover everything
+    svc.move("upd", u, [0, 0], [100, 100])   # grows to cover everything
     after = len(svc.matches_for_update(u))
     print(f"after move: {before} -> {after} matched subscriptions")
     assert after >= before
@@ -68,7 +68,7 @@ def service_demo() -> None:
     # one incremental-index batch and returns exactly the pairs the batch
     # created/destroyed — the notification set, no world rebuild.
     svc.all_pairs()                           # warm the cached match state
-    svc.move_update(u, [0, 0], [5, 5])        # shrinks back down
+    svc.move("upd", u, [0, 0], [5, 5])        # shrinks back down
     delta = svc.flush()
     print(f"delta rematch: +{len(delta.added)} / -{len(delta.removed)} pairs")
     assert len(svc.all_pairs()) == svc.match_count()

@@ -1,0 +1,77 @@
+"""repro.api — the ONE supported public surface (DESIGN.md §11).
+
+Everything an application needs sits here, and only here:
+
+* :class:`DDMService` — the single-tenant service with the unified,
+  side-parameterized mutation surface: ``register(side, lo, hi)``,
+  ``move(side, rids, lo, hi)``, ``unregister(side, rids)`` (each accepts
+  a scalar region or a block), plus ``flush`` / ``pairs`` /
+  ``match_count`` / ``stats``.
+* :class:`Broker` and friends — the concurrent multi-tenant frontend:
+  bounded admission queues, per-op deadlines, degraded reads.
+* The exception hierarchy rooted at :class:`DDMError` — one ``except``
+  clause catches everything this library raises on purpose.
+* The engine registry — :func:`register_engine` a :class:`MatchEngine`
+  and every conformance check, differential fuzz run and benchmark
+  picks it up.
+
+The 12 historical per-side/per-arity ``DDMService`` methods
+(``register_subscriptions``, ``move_updates``, …) still work but emit
+:class:`DeprecationWarning` with a one-line migration hint; see the
+README migration table.  Import from ``repro.api`` — deeper module paths
+(``repro.core.service``, ``repro.frontend.broker``) are stable for now
+but are not part of the supported surface and carry no deprecation
+period.
+"""
+from __future__ import annotations
+
+from repro.core.errors import (
+    CapacityError,
+    DDMError,
+    DeadlineExceeded,
+    GridOverflowError,
+    OverloadError,
+    ValidationError,
+)
+from repro.core.service import DDMService
+from repro.frontend.broker import (
+    AdmissionPolicy,
+    Broker,
+    BrokerSession,
+    CountResult,
+    DegradePolicy,
+    Ticket,
+    replay_journal,
+)
+from repro.testing.conformance import (
+    MatchEngine,
+    all_engines,
+    engines_for,
+    get_engine,
+)
+from repro.testing.conformance import register as register_engine
+
+__all__ = [
+    # services
+    "DDMService",
+    "Broker",
+    "BrokerSession",
+    "AdmissionPolicy",
+    "DegradePolicy",
+    "CountResult",
+    "Ticket",
+    "replay_journal",
+    # errors
+    "DDMError",
+    "ValidationError",
+    "CapacityError",
+    "GridOverflowError",
+    "OverloadError",
+    "DeadlineExceeded",
+    # engine registry
+    "MatchEngine",
+    "register_engine",
+    "all_engines",
+    "engines_for",
+    "get_engine",
+]

@@ -46,6 +46,12 @@ from repro.core.rank import (
     per_upd_match_counts,
 )
 from repro.core.brute_force import bf_count, bf_count_sharded
+from repro.core.errors import (
+    DDMError,
+    ValidationError,
+    OverloadError,
+    DeadlineExceeded,
+)
 from repro.core.grid import GridOverflowError, grid_count
 from repro.core.enumerate import (
     enumerate_matches,
@@ -99,6 +105,7 @@ __all__ = [
     "sequential_sbm_pairs_numpy_ddim",
     "rank_count", "rank_count_sharded", "per_sub_match_counts",
     "per_upd_match_counts", "bf_count", "bf_count_sharded", "grid_count",
+    "DDMError", "ValidationError", "OverloadError", "DeadlineExceeded",
     "GridOverflowError",
     "enumerate_matches", "enumerate_matches_ddim",
     "enumerate_matches_ddim_planned", "enumerate_matches_sweep_numpy",

@@ -1,0 +1,64 @@
+"""Unified DDM exception hierarchy (DESIGN.md §11).
+
+Every failure the matching system raises on purpose descends from
+:class:`DDMError`, so a caller holding a service, an index or a broker
+session can catch one base type at the trust boundary instead of pattern-
+matching builtin exceptions per layer.  The concrete types double-inherit
+from the builtin each call site historically raised (``ValidationError``
+is-a ``ValueError``, ``CapacityError``/``GridOverflowError`` are
+``RuntimeError``s, ``DeadlineExceeded`` is-a ``TimeoutError``), so every
+pre-hierarchy ``except ValueError`` / ``pytest.raises(RuntimeError)``
+continues to hold — the hierarchy is additive, not a break.
+
+Old import paths stay valid as aliases: ``repro.core.runtime.CapacityError``
+and ``repro.core.grid.GridOverflowError`` re-export the classes defined
+here.  This module is import-light (stdlib only) — it sits below every
+other layer, including the no-jax-at-import host paths.
+"""
+from __future__ import annotations
+
+
+class DDMError(Exception):
+    """Base of every deliberate failure raised by the DDM system."""
+
+
+class ValidationError(DDMError, ValueError):
+    """A request violated the service-boundary contract before any state
+    changed: malformed region bounds (``lo > hi``, wrong length, NaN),
+    rid misuse (negative, repeated within one batch, re-add of a live
+    rid), unknown sides, or illegal pending-queue compositions."""
+
+
+class CapacityError(DDMError, RuntimeError):
+    """An enumeration cannot fit its policy's capacity bounds: either the
+    required pair buffer exceeds a ``hard_cap`` (the policy that raises
+    instead of growing) or the count-then-retry loop failed to converge
+    (:mod:`repro.core.runtime`)."""
+
+
+class GridOverflowError(DDMError, RuntimeError):
+    """``grid_count(strict=True)``: a cell overflowed ``cap`` — the count
+    would be a silent lower bound."""
+
+
+class OverloadError(DDMError, RuntimeError):
+    """Admission control refused a mutation: the session's bounded queue
+    is full under the ``reject`` backpressure policy, the request was
+    shed under ``shed_oldest``, or a ``block``-policy producer timed out
+    waiting for a flush to drain the queue (:mod:`repro.frontend`)."""
+
+
+class DeadlineExceeded(DDMError, TimeoutError):
+    """A queued mutation's deadline passed before a flush applied it.
+    Deadlines are enforced at flush boundaries: the op is dropped (never
+    partially applied) and its ticket resolves to this error."""
+
+
+__all__ = [
+    "DDMError",
+    "ValidationError",
+    "CapacityError",
+    "GridOverflowError",
+    "OverloadError",
+    "DeadlineExceeded",
+]

@@ -16,6 +16,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.errors import GridOverflowError  # noqa: F401  (re-export:
+# the historical `from repro.core.grid import GridOverflowError` import
+# path stays valid; the class lives in the unified hierarchy, DESIGN.md §11)
 from repro.core.intervals import Extents, intersect_1d
 
 
@@ -53,11 +56,6 @@ def _bin_extents(lo, hi, num_cells: int, cell_width: float, cap: int):
     counts = seg_start[1:num_cells + 1] - seg_start[:num_cells]
     overflow = jnp.sum(jnp.maximum(counts - cap, 0))
     return buckets[:num_cells], overflow
-
-
-class GridOverflowError(RuntimeError):
-    """``grid_count(strict=True)``: a cell overflowed ``cap`` — the count
-    would be a silent lower bound."""
 
 
 def grid_count(subs: Extents, upds: Extents, *, num_cells: int = 64,

@@ -55,6 +55,7 @@ from typing import Iterable, List, NamedTuple, Optional, Set, Tuple
 import numpy as np
 
 from repro.core import runtime as runtime_lib
+from repro.core.errors import ValidationError
 
 SUB = "sub"
 UPD = "upd"
@@ -79,11 +80,11 @@ def _as_bounds(dims: int, lo, hi, *, rid=None) -> Tuple[np.ndarray, np.ndarray]:
     lo = np.atleast_1d(np.asarray(lo, np.float32))
     hi = np.atleast_1d(np.asarray(hi, np.float32))
     if lo.shape != (dims,) or hi.shape != (dims,):
-        raise ValueError(
+        raise ValidationError(
             f"bounds{who} must have length {dims}: got lo {lo.shape}, "
             f"hi {hi.shape}")
     if not np.all(lo <= hi):
-        raise ValueError(f"malformed region{who}: lo {lo} > hi {hi} "
+        raise ValidationError(f"malformed region{who}: lo {lo} > hi {hi} "
                          "(the sweep precondition is lo <= hi)")
     return lo, hi
 
@@ -102,7 +103,7 @@ def _as_bounds_block(dims: int, lo, hi, *, rids=None
     if lo.ndim == 1 and dims == 1:
         lo, hi = lo[:, None], hi[:, None]
     if lo.ndim != 2 or lo.shape != hi.shape or lo.shape[1] != dims:
-        raise ValueError(
+        raise ValidationError(
             f"bulk bounds must be (b, {dims}): got lo {lo.shape}, "
             f"hi {hi.shape}")
     lo, hi = lo.T, hi.T                         # (d, b) views, no copy
@@ -112,7 +113,7 @@ def _as_bounds_block(dims: int, lo, hi, *, rids=None
         rids = np.atleast_1d(np.asarray(rids)) if rids is not None else None
         who = f" (rid {int(rids[j])})" if rids is not None and j < rids.size \
             else ""
-        raise ValueError(
+        raise ValidationError(
             f"malformed region at row {j}{who}: lo {lo[:, j]} > hi {hi[:, j]} "
             "(the sweep precondition is lo <= hi)")
     return lo, hi
@@ -294,9 +295,9 @@ class IncrementalIndex:
                      runtime_lib.BulkRegimePolicy] = None,
                  recorder: Optional[runtime_lib.StatsRecorder] = None):
         if dims < 1:
-            raise ValueError(f"dims must be >= 1, got {dims}")
+            raise ValidationError(f"dims must be >= 1, got {dims}")
         if delta_impl not in ("vector", "loop"):
-            raise ValueError(f"delta_impl must be 'vector' or 'loop', "
+            raise ValidationError(f"delta_impl must be 'vector' or 'loop', "
                              f"got {delta_impl!r}")
         self.dims = dims
         # "vector": one stacked rematch per batch (_matches_of_many);
@@ -375,19 +376,19 @@ class IncrementalIndex:
         seen: Set[Tuple[str, int]] = set()
         for side, rid in ([(s, r) for s, r, _, _ in adds + moves] + removes):
             if side not in _SIDES:
-                raise ValueError(f"unknown side {side!r}")
+                raise ValidationError(f"unknown side {side!r}")
             if rid < 0:
-                raise ValueError(
+                raise ValidationError(
                     f"region ids must be >= 0, got {side} rid {rid} "
                     "(negative ids would alias table slots)")
             if (side, rid) in seen:
-                raise ValueError(
+                raise ValidationError(
                     f"{side} region {rid} appears twice in one batch "
                     "(compose adds/moves/removes upstream)")
             seen.add((side, rid))
         for side, rid, _, _ in adds:
             if rid < self._live[side].shape[0] and self._live[side][rid]:
-                raise ValueError(f"{side} region {rid} already in index")
+                raise ValidationError(f"{side} region {rid} already in index")
         for side, rid in [(s, r) for s, r, _, _ in moves] + removes:
             if not (rid < self._live[side].shape[0] and self._live[side][rid]):
                 raise KeyError(f"{side} region {rid} not in index")
@@ -422,11 +423,11 @@ class IncrementalIndex:
         empty = np.zeros(0, np.int64)
         for side in (*adds, *moves, *removes):
             if side not in _SIDES:
-                raise ValueError(f"unknown side {side!r}")
+                raise ValidationError(f"unknown side {side!r}")
         for grp in (adds, moves):
             for side, (rids, lo, hi) in grp.items():
                 if rids.ndim != 1 or lo.shape[1] != rids.shape[0]:
-                    raise ValueError(
+                    raise ValidationError(
                         f"{side}: rids {rids.shape} do not match bounds "
                         f"for {lo.shape[1]} regions")
         total = 0
@@ -440,19 +441,19 @@ class IncrementalIndex:
                 continue
             if (all_r < 0).any():
                 bad = int(all_r[all_r < 0][0])
-                raise ValueError(
+                raise ValidationError(
                     f"region ids must be >= 0, got {side} rid {bad} "
                     "(negative ids would alias table slots)")
             if np.unique(all_r).size != all_r.size:
                 vals, counts = np.unique(all_r, return_counts=True)
-                raise ValueError(
+                raise ValidationError(
                     f"{side} region {int(vals[counts > 1][0])} appears twice "
                     "in one batch (compose adds/moves/removes upstream)")
             cap = self._live[side].shape[0]
             live_add = add_r[(add_r < cap)
                              & self._live[side][np.minimum(add_r, cap - 1)]]
             if live_add.size:
-                raise ValueError(
+                raise ValidationError(
                     f"{side} region {int(live_add[0])} already in index")
             changed = np.concatenate([move_r, rem_r])
             dead = changed[(changed >= cap) |

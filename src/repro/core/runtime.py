@@ -50,6 +50,8 @@ from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.core.errors import CapacityError, ValidationError
+
 Pair = Tuple[int, int]
 PairSet = Set[Pair]
 
@@ -104,10 +106,9 @@ def pad_columns(a: np.ndarray, n: int, fill: float) -> np.ndarray:
 # Capacity planning
 # ---------------------------------------------------------------------------
 
-class CapacityError(RuntimeError):
-    """Raised when an enumeration cannot fit its policy's capacity bounds:
-    either the required buffer exceeds a ``hard_cap`` (the policy that
-    raises instead of growing) or the retry loop failed to converge."""
+# CapacityError is defined in repro.core.errors (the unified DDMError
+# hierarchy, DESIGN.md §11) and re-exported here — the historical import
+# path `from repro.core.runtime import CapacityError` stays valid.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -419,7 +420,7 @@ class BulkRegimePolicy:
 
     def __post_init__(self):
         if self.force is not None and self.force not in BULK_REGIMES:
-            raise ValueError(
+            raise ValidationError(
                 f"force must be one of {BULK_REGIMES}, got {self.force!r}")
 
 

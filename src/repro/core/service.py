@@ -34,7 +34,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+import warnings
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -43,8 +44,22 @@ from repro.core import ddim as ddim_lib
 from repro.core import incremental as incr_lib
 from repro.core import runtime as runtime_lib
 from repro.core import sweep as sweep_lib
+from repro.core.errors import ValidationError
 from repro.core.incremental import SUB, UPD, BatchDelta, IncrementalIndex
 from repro.core.intervals import Extents
+
+# accepted spellings of the side argument of the unified mutation API
+# (register/move/unregister) — canonicalized to the SUB/UPD constants
+_SIDE_ALIASES = {SUB: SUB, UPD: UPD, "subscription": SUB, "update": UPD}
+
+
+def _canon_side(side: str) -> str:
+    try:
+        return _SIDE_ALIASES[side]
+    except (KeyError, TypeError):
+        raise ValidationError(
+            f"unknown side {side!r}: expected 'sub'/'subscription' or "
+            "'upd'/'update'") from None
 
 
 @dataclasses.dataclass
@@ -163,7 +178,7 @@ class _RegionTable:
         rids = self._validated_live(rids, unique=True)
         lo, hi = self._validated_block(lo, hi, rids=rids)
         if rids.shape[0] != lo.shape[1]:
-            raise ValueError(f"{rids.shape[0]} rids but bounds for "
+            raise ValidationError(f"{rids.shape[0]} rids but bounds for "
                              f"{lo.shape[1]} regions")
         self.lo[:, rids] = lo
         self.hi[:, rids] = hi
@@ -179,7 +194,7 @@ class _RegionTable:
             raise KeyError(f"region {int(bad[0])} not registered")
         if unique and np.unique(rids).size != rids.size:
             vals, counts = np.unique(rids, return_counts=True)
-            raise ValueError(
+            raise ValidationError(
                 f"region {int(vals[counts > 1][0])} repeated in one bulk call")
         return rids
 
@@ -199,8 +214,8 @@ class DDMService:
     """Data Distribution Management service backed by parallel SBM.
 
     >>> svc = DDMService(dims=2, capacity=1024)
-    >>> s = svc.register_subscription([0, 0], [10, 10])
-    >>> u = svc.register_update([5, 5], [20, 20])
+    >>> s = svc.register("sub", [0, 0], [10, 10])
+    >>> u = svc.register("upd", [5, 5], [20, 20])
     >>> svc.matches_for_update(u)
     [s]
 
@@ -267,43 +282,116 @@ class DDMService:
                 # Reachable only if the table invariant broke (a live rid
                 # re-inserted without an intervening remove).  This used to
                 # be silently composed to "remove" — losing the region.
-                raise ValueError(
+                raise ValidationError(
                     f"{side} region {rid}: 'add' composed onto a pending "
                     "'move' — the table must free a rid before re-insert")
             self._pending[key] = op          # move∘move=move, move∘remove=remove
         else:  # prev == "remove" — the slot was freed and re-inserted
             if op != "add":
-                raise ValueError(
+                raise ValidationError(
                     f"{side} region {rid}: {op!r} composed onto a pending "
                     "'remove' — only a re-insert may follow a remove")
             self._pending[key] = "move"      # net effect: extent replaced
 
-    # -- registration -----------------------------------------------------
+    # -- the unified mutation surface (repro.api, DESIGN.md §11) ----------
+    # One verb per operation, side-parameterized, scalar-or-block by input
+    # shape.  A single region's bounds are a scalar (d = 1) or a length-d
+    # sequence; a block is a (b,) array (d = 1) or a (b, d) array — for
+    # d = 1 any 1-D bounds input is a block (a block of one returns a
+    # length-1 rid array).  Moves/unregisters dispatch on ``rids``: a
+    # scalar int is one region, an int array a block.  Blocks ride the
+    # vectorized bulk path (one Python call per batch, elastic tables, one
+    # stacked rematch at the next flush).
+    def register(self, side: str, lo, hi) -> Union[int, np.ndarray]:
+        """Register one region (returns its rid) or a ``(b, d)`` block
+        (returns the length-b rid array) on ``side``."""
+        side = _canon_side(side)
+        table = self._table(side)
+        if self._is_block_bounds(lo):
+            rids = table.insert_many(lo, hi)
+            self._queue_many(side, rids, "add")
+            return rids
+        rid = table.insert(lo, hi)
+        self._queue(side, rid, "add")
+        return rid
+
+    def move(self, side: str, rids, lo, hi) -> None:
+        """Move one region (``rids`` a scalar int) or a block (``rids`` an
+        int array, bounds ``(b, d)``) to new bounds — dynamic DDM (Pan et
+        al. [20]): the slot is overwritten and joins the pending batch;
+        the next flush rematches only the delta."""
+        side = _canon_side(side)
+        table = self._table(side)
+        if np.ndim(rids) == 0:
+            table.move(int(rids), lo, hi)
+            self._queue(side, int(rids), "move")
+        else:
+            r = table.move_many(rids, lo, hi)
+            self._queue_many(side, r, "move")
+
+    def unregister(self, side: str, rids) -> None:
+        """Unregister one region (scalar ``rids``) or a block (int array).
+        Dead slots become inert ``[+inf, -inf]`` sentinels."""
+        side = _canon_side(side)
+        table = self._table(side)
+        if np.ndim(rids) == 0:
+            table.remove(int(rids))
+            self._queue(side, int(rids), "remove")
+        else:
+            r = table.remove_many(rids)
+            self._queue_many(side, r, "remove")
+
+    def _is_block_bounds(self, lo) -> bool:
+        """Shape rule of the scalar-or-block dispatch (see above)."""
+        nd = np.ndim(lo)
+        return nd >= 2 or (nd == 1 and self.dims == 1)
+
+    # -- deprecated per-side mutation spellings ---------------------------
+    # The pre-PR-8 surface: 12 per-side/per-arity methods, kept as thin
+    # wrappers over the same internals so behavior (rid assignment,
+    # validation errors, pending composition) is bit-identical, each
+    # emitting a DeprecationWarning naming its one-line replacement.
+    # They will be removed once internal callers are gone; new code uses
+    # the unified register/move/unregister via repro.api.
+    @staticmethod
+    def _warn_deprecated(old: str, new: str) -> None:
+        warnings.warn(
+            f"DDMService.{old} is deprecated; use DDMService.{new} "
+            "(the unified surface exported by repro.api)",
+            DeprecationWarning, stacklevel=3)
+
     def register_subscription(self, lo, hi) -> int:
+        self._warn_deprecated("register_subscription",
+                              "register('sub', lo, hi)")
         rid = self._subs.insert(lo, hi)
         self._queue(SUB, rid, "add")
         return rid
 
     def register_update(self, lo, hi) -> int:
+        self._warn_deprecated("register_update", "register('upd', lo, hi)")
         rid = self._upds.insert(lo, hi)
         self._queue(UPD, rid, "add")
         return rid
 
     def unregister_subscription(self, rid: int) -> None:
+        self._warn_deprecated("unregister_subscription",
+                              "unregister('sub', rid)")
         self._subs.remove(rid)   # dead slots are inert sentinels
         self._queue(SUB, rid, "remove")
 
     def unregister_update(self, rid: int) -> None:
+        self._warn_deprecated("unregister_update", "unregister('upd', rid)")
         self._upds.remove(rid)
         self._queue(UPD, rid, "remove")
 
-    # -- dynamic DDM (Pan et al. [20]): a moved region overwrites its slot
-    # and joins the pending batch; the next flush rematches only the delta.
     def move_subscription(self, rid: int, lo, hi) -> None:
+        self._warn_deprecated("move_subscription",
+                              "move('sub', rid, lo, hi)")
         self._subs.move(rid, lo, hi)
         self._queue(SUB, rid, "move")
 
     def move_update(self, rid: int, lo, hi) -> None:
+        self._warn_deprecated("move_update", "move('upd', rid, lo, hi)")
         self._upds.move(rid, lo, hi)
         self._queue(UPD, rid, "move")
 
@@ -328,30 +416,38 @@ class DDMService:
                 pend[(side, r)] = op
 
     def register_subscriptions(self, lo, hi) -> np.ndarray:
-        """Register b subscription regions from a ``(b, d)`` block; returns
-        their rids (the bulk form of :meth:`register_subscription`)."""
+        """Deprecated: :meth:`register` with block-shaped bounds."""
+        self._warn_deprecated("register_subscriptions",
+                              "register('sub', lo, hi)")
         rids = self._subs.insert_many(lo, hi)
         self._queue_many(SUB, rids, "add")
         return rids
 
     def register_updates(self, lo, hi) -> np.ndarray:
+        self._warn_deprecated("register_updates", "register('upd', lo, hi)")
         rids = self._upds.insert_many(lo, hi)
         self._queue_many(UPD, rids, "add")
         return rids
 
     def move_subscriptions(self, rids, lo, hi) -> None:
+        self._warn_deprecated("move_subscriptions",
+                              "move('sub', rids, lo, hi)")
         rids = self._subs.move_many(rids, lo, hi)
         self._queue_many(SUB, rids, "move")
 
     def move_updates(self, rids, lo, hi) -> None:
+        self._warn_deprecated("move_updates", "move('upd', rids, lo, hi)")
         rids = self._upds.move_many(rids, lo, hi)
         self._queue_many(UPD, rids, "move")
 
     def unregister_subscriptions(self, rids) -> None:
+        self._warn_deprecated("unregister_subscriptions",
+                              "unregister('sub', rids)")
         rids = self._subs.remove_many(rids)
         self._queue_many(SUB, rids, "remove")
 
     def unregister_updates(self, rids) -> None:
+        self._warn_deprecated("unregister_updates", "unregister('upd', rids)")
         rids = self._upds.remove_many(rids)
         self._queue_many(UPD, rids, "remove")
 
@@ -513,6 +609,11 @@ class DDMService:
         if self._match_cache is None:
             self._match_cache = self._rebuild_pairs()
         return set(self._match_cache)
+
+    def pairs(self) -> Set[Tuple[int, int]]:
+        """The facade name for :meth:`all_pairs` (repro.api) — every
+        matching ``(subscription rid, update rid)``."""
+        return self.all_pairs()
 
     def _row_matches(self, table: _RegionTable, lo: np.ndarray,
                      hi: np.ndarray) -> List[int]:

@@ -243,11 +243,26 @@ def _service_pairs(subs, upds):
 
     s_lo, s_hi, u_lo, u_hi, d = _np_sides(subs, upds)
     svc = DDMService(dims=d, capacity=4)
-    sids = svc.register_subscriptions(s_lo, s_hi)
-    uids = svc.register_updates(u_lo, u_hi)
+    sids = svc.register("sub", s_lo, s_hi)
+    uids = svc.register("upd", u_lo, u_hi)
     inv_s = {int(r): i for i, r in enumerate(sids)}
     inv_u = {int(r): j for j, r in enumerate(uids)}
     return {(inv_s[a], inv_u[b]) for a, b in svc.all_pairs()}
+
+
+def _facade_pairs(subs, upds):
+    """The PR 8 public surface end to end: ``repro.api.DDMService`` with
+    side-parameterized register + ``pairs()`` — proves the facade matches
+    every other engine, not just that it forwards."""
+    from repro import api
+
+    s_lo, s_hi, u_lo, u_hi, d = _np_sides(subs, upds)
+    svc = api.DDMService(dims=d, capacity=4)
+    sids = svc.register("sub", s_lo, s_hi)
+    uids = svc.register("upd", u_lo, u_hi)
+    inv_s = {int(r): i for i, r in enumerate(sids)}
+    inv_u = {int(r): j for j, r in enumerate(uids)}
+    return {(inv_s[a], inv_u[b]) for a, b in svc.pairs()}
 
 
 def _ensure_builtin() -> None:
@@ -265,6 +280,7 @@ def _ensure_builtin() -> None:
     register(MatchEngine("incremental_index", _incremental_pairs,
                          stateful=True))
     register(MatchEngine("ddm_service", _service_pairs, stateful=True))
+    register(MatchEngine("api_facade", _facade_pairs, stateful=True))
 
 
 # ---------------------------------------------------------------------------

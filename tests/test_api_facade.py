@@ -1,0 +1,210 @@
+"""PR 8 satellites: the unified public surface and its deprecation shims.
+
+* every one of the 12 legacy per-side/per-arity ``DDMService`` methods
+  emits ``DeprecationWarning`` with a migration hint AND behaves
+  bit-identically to the unified call it forwards to (twin services,
+  same inputs, same rids/pairs out);
+* the ``repro.api`` facade exports work and the ``api_facade``
+  conformance engine agrees with the cross-checked host oracle;
+* the exception hierarchy: one ``except DDMError`` catches everything,
+  old import paths still resolve to the same classes, and the types
+  double-inherit from the builtins pre-hierarchy code caught.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import DDMService
+from repro.testing import conformance
+from repro.testing.oracles import service_pairs
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _twin_services(dims=1):
+    return DDMService(dims=dims, capacity=8), DDMService(dims=dims, capacity=8)
+
+
+def _seeded(svc, dims=1):
+    """Two overlapping regions per side through the NEW surface."""
+    if dims == 1:
+        s = svc.register("sub", np.array([0.0, 20.0]), np.array([10.0, 30.0]))
+        u = svc.register("upd", np.array([5.0, 25.0]), np.array([6.0, 26.0]))
+    else:
+        s = svc.register("sub", np.zeros((2, dims)),
+                         np.full((2, dims), 10.0))
+        u = svc.register("upd", np.full((2, dims), 5.0),
+                         np.full((2, dims), 6.0))
+    return s, u
+
+
+# ---------------------------------------------------------------------------
+# the 12 deprecation shims: warning + identical behavior
+# ---------------------------------------------------------------------------
+
+def test_register_scalar_shims_warn_and_match():
+    for old_name, side in (("register_subscription", "sub"),
+                           ("register_update", "upd")):
+        old, new = _twin_services()
+        with pytest.warns(DeprecationWarning, match=rf"DDMService\.{old_name} is deprecated.*register"):
+            rid_old = getattr(old, old_name)([1.0], [2.0])
+        rid_new = new.register(side, [[1.0]], [[2.0]])
+        assert rid_old == int(rid_new[0])
+        assert service_pairs(old) == service_pairs(new)
+
+
+def test_register_bulk_shims_warn_and_match():
+    lo = np.array([0.0, 5.0], np.float32)
+    hi = np.array([4.0, 9.0], np.float32)
+    for old_name, side in (("register_subscriptions", "sub"),
+                           ("register_updates", "upd")):
+        old, new = _twin_services()
+        with pytest.warns(DeprecationWarning, match=old_name):
+            rids_old = getattr(old, old_name)(lo, hi)
+        rids_new = new.register(side, lo, hi)
+        assert rids_old.tolist() == rids_new.tolist()
+        assert service_pairs(old) == service_pairs(new)
+
+
+def test_move_scalar_shims_warn_and_match():
+    for old_name, side in (("move_subscription", "sub"),
+                           ("move_update", "upd")):
+        old, new = _twin_services()
+        _seeded(old), _seeded(new)
+        rid = 0 if side == "sub" else int(old._upds.live_ids()[0])
+        with pytest.warns(DeprecationWarning, match=rf"{old_name} is deprecated.*move"):
+            getattr(old, old_name)(rid, [50.0], [60.0])
+        new.move(side, rid, [50.0], [60.0])
+        assert old.all_pairs() == new.all_pairs()
+        assert service_pairs(old) == service_pairs(new)
+
+
+def test_move_bulk_shims_warn_and_match():
+    for old_name, side in (("move_subscriptions", "sub"),
+                           ("move_updates", "upd")):
+        old, new = _twin_services()
+        _seeded(old), _seeded(new)
+        rids = (old._subs if side == "sub" else old._upds).live_ids()
+        lo = np.array([100.0, 200.0], np.float32)
+        with pytest.warns(DeprecationWarning, match=old_name):
+            getattr(old, old_name)(rids, lo, lo + 5.0)
+        new.move(side, rids, lo, lo + 5.0)
+        assert old.all_pairs() == new.all_pairs()
+        assert service_pairs(old) == service_pairs(new)
+
+
+def test_unregister_shims_warn_and_match():
+    for old_name, side, bulk in (
+            ("unregister_subscription", "sub", False),
+            ("unregister_update", "upd", False),
+            ("unregister_subscriptions", "sub", True),
+            ("unregister_updates", "upd", True)):
+        old, new = _twin_services()
+        _seeded(old), _seeded(new)
+        table = old._subs if side == "sub" else old._upds
+        target = table.live_ids() if bulk else int(table.live_ids()[0])
+        with pytest.warns(DeprecationWarning, match=rf"{old_name} is deprecated.*unregister"):
+            getattr(old, old_name)(target)
+        new.unregister(side, target)
+        assert old.all_pairs() == new.all_pairs()
+        assert service_pairs(old) == service_pairs(new)
+
+
+def test_new_surface_emits_no_deprecation_warning():
+    svc = DDMService(dims=1, capacity=8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        rid = svc.register("sub", 0.0, 1.0)
+        svc.move("sub", rid, 2.0, 3.0)
+        svc.unregister("sub", rid)
+        svc.flush()
+
+
+# ---------------------------------------------------------------------------
+# the unified surface itself
+# ---------------------------------------------------------------------------
+
+def test_side_aliases_and_validation():
+    svc = DDMService(dims=1, capacity=8)
+    a = svc.register("subscription", 0.0, 10.0)
+    b = svc.register("update", 5.0, 6.0)
+    assert svc.pairs() == {(a, b)}
+    with pytest.raises(api.ValidationError, match="unknown side"):
+        svc.register("publisher", 0.0, 1.0)
+
+
+def test_scalar_vs_block_dispatch_d1():
+    """For d=1 a 1-D bounds array is a BLOCK (of possibly one region);
+    scalars are the scalar path."""
+    svc = DDMService(dims=1, capacity=8)
+    rid = svc.register("sub", 0.0, 1.0)
+    assert isinstance(rid, int)
+    rids = svc.register("sub", np.array([2.0]), np.array([3.0]))
+    assert isinstance(rids, np.ndarray) and rids.shape == (1,)
+
+
+def test_scalar_vs_block_dispatch_d2():
+    svc = DDMService(dims=2, capacity=8)
+    rid = svc.register("sub", [0.0, 0.0], [1.0, 1.0])     # one region
+    assert isinstance(rid, int)
+    rids = svc.register("sub", np.zeros((2, 2)), np.ones((2, 2)))
+    assert isinstance(rids, np.ndarray) and rids.shape == (2,)
+
+
+def test_facade_engine_passes_conformance():
+    """The registry picks up ``api_facade`` like any engine and it agrees
+    with the cross-checked oracle (same check the fuzzer runs)."""
+    from repro.core.intervals import make_uniform_workload
+    from repro.testing.oracles import reference_pairs
+
+    engine = conformance.get_engine("api_facade")
+    for d, seed in ((1, 0), (2, 1)):
+        subs, upds = make_uniform_workload(jax.random.PRNGKey(seed),
+                                           40, 40, alpha=2.0, d=d)
+        mismatch = conformance.check_engine(engine, subs, upds,
+                                            want=reference_pairs(subs, upds))
+        assert mismatch is None, mismatch
+
+
+def test_api_exports_resolve_and_are_canonical():
+    assert api.DDMService is DDMService
+    from repro.frontend import Broker as FrontBroker
+    assert api.Broker is FrontBroker
+    assert api.register_engine is conformance.register
+
+
+# ---------------------------------------------------------------------------
+# the exception hierarchy (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_hierarchy_roots_and_double_inheritance():
+    for exc in (api.ValidationError, api.CapacityError,
+                api.GridOverflowError, api.OverloadError,
+                api.DeadlineExceeded):
+        assert issubclass(exc, api.DDMError)
+    assert issubclass(api.ValidationError, ValueError)
+    assert issubclass(api.CapacityError, RuntimeError)
+    assert issubclass(api.GridOverflowError, RuntimeError)
+    assert issubclass(api.OverloadError, RuntimeError)
+    assert issubclass(api.DeadlineExceeded, TimeoutError)
+
+
+def test_old_import_paths_are_aliases():
+    from repro.core.errors import CapacityError as canonical_cap
+    from repro.core.errors import GridOverflowError as canonical_grid
+    from repro.core.grid import GridOverflowError as grid_path
+    from repro.core.runtime import CapacityError as runtime_path
+
+    assert runtime_path is canonical_cap
+    assert grid_path is canonical_grid
+
+
+def test_one_except_clause_catches_the_library():
+    svc = DDMService(dims=1, capacity=8)
+    with pytest.raises(api.DDMError):
+        svc.register("sub", [[1.0]], [[0.0]])          # lo > hi
+    with pytest.raises(api.DDMError):
+        svc.register("nope", 0.0, 1.0)                 # bad side

@@ -1,0 +1,126 @@
+"""The public-surface lockfile gate (ISSUE PR 8, satellite 5).
+
+``repro.api`` is the one supported surface; this test freezes it.  The
+committed ``tests/api_surface.json`` records every ``__all__`` export and
+its public signature(s); any drift — a renamed kwarg, a dropped method, a
+new export — fails CI until the lockfile is regenerated *deliberately*:
+
+    PYTHONPATH=src python tests/test_api_surface.py --regen
+
+which makes surface changes show up in review as a JSON diff instead of
+slipping out silently.
+"""
+from __future__ import annotations
+
+import inspect
+import json
+import pathlib
+
+import pytest
+
+LOCKFILE = pathlib.Path(__file__).with_name("api_surface.json")
+
+
+def _describe_callable(obj) -> str:
+    try:
+        return str(inspect.signature(obj))
+    except (TypeError, ValueError):  # builtins without introspectable sigs
+        return "(...)"
+
+
+def _describe_class(cls) -> dict:
+    """Public methods/properties the class itself defines (inherited
+    stdlib machinery — object, Exception — is not surface)."""
+    import dataclasses
+
+    methods = {}
+    if dataclasses.is_dataclass(cls):
+        for f in dataclasses.fields(cls):
+            default = ("<required>" if f.default is dataclasses.MISSING
+                       and f.default_factory is dataclasses.MISSING
+                       else repr(f.default)
+                       if f.default is not dataclasses.MISSING
+                       else "<factory>")
+            methods[f.name] = f"<field: {f.type} = {default}>"
+    for klass in cls.__mro__:
+        if klass.__module__.startswith(("builtins", "typing")):
+            continue
+        for name, member in vars(klass).items():
+            if name.startswith("_") or name in methods:
+                continue
+            if isinstance(member, property):
+                methods[name] = "<property>"
+            elif isinstance(member, staticmethod):
+                methods[name] = _describe_callable(member.__func__)
+            elif callable(member):
+                methods[name] = _describe_callable(member)
+    return dict(sorted(methods.items()))
+
+
+def current_surface() -> dict:
+    from repro import api
+
+    surface = {}
+    for name in sorted(api.__all__):
+        obj = getattr(api, name)
+        if inspect.isclass(obj):
+            entry = {"kind": "class", "methods": _describe_class(obj)}
+            if issubclass(obj, BaseException):
+                entry["kind"] = "exception"
+                entry["bases"] = sorted(
+                    b.__name__ for b in obj.__mro__[1:]
+                    if b not in (object, BaseException))
+                entry.pop("methods")
+        elif callable(obj):
+            entry = {"kind": "function",
+                     "signature": _describe_callable(obj)}
+        else:
+            entry = {"kind": "value", "repr": repr(obj)}
+        surface[name] = entry
+    return surface
+
+
+def test_api_all_is_sorted_sections_aside():
+    from repro import api
+
+    assert len(api.__all__) == len(set(api.__all__)), "duplicate exports"
+    for name in api.__all__:
+        assert hasattr(api, name), f"__all__ lists missing name {name!r}"
+
+
+def test_api_surface_matches_lockfile():
+    assert LOCKFILE.exists(), (
+        "tests/api_surface.json missing — regenerate with "
+        "`PYTHONPATH=src python tests/test_api_surface.py --regen`")
+    locked = json.loads(LOCKFILE.read_text())
+    current = current_surface()
+    if current == locked:
+        return
+    gone = sorted(set(locked) - set(current))
+    new = sorted(set(current) - set(locked))
+    changed = sorted(k for k in set(locked) & set(current)
+                     if locked[k] != current[k])
+    detail = []
+    if gone:
+        detail.append(f"removed exports: {gone}")
+    if new:
+        detail.append(f"new exports: {new}")
+    for k in changed:
+        detail.append(f"changed {k}:\n  locked : {json.dumps(locked[k])}\n"
+                      f"  current: {json.dumps(current[k])}")
+    pytest.fail(
+        "repro.api public surface drifted from tests/api_surface.json.\n"
+        + "\n".join(detail)
+        + "\nIf intentional, regenerate: "
+          "`PYTHONPATH=src python tests/test_api_surface.py --regen`")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        LOCKFILE.write_text(json.dumps(current_surface(), indent=2,
+                                       sort_keys=True) + "\n")
+        print(f"wrote {LOCKFILE}")
+    else:
+        print(json.dumps(current_surface(), indent=2, sort_keys=True))

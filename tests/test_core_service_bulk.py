@@ -7,7 +7,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import DDMService
+from repro.core import DDMService, ValidationError
 from repro.core.incremental import SUB
 from repro.core.service import _RegionTable
 from repro.testing.oracles import service_pairs as _oracle
@@ -104,15 +104,17 @@ def test_bulk_accepts_1d_vectors_for_dims1():
 
 def test_bulk_validation_leaves_no_debris():
     """Errors must name the offending row/rid (satellite: no bare
-    ValueErrors) and leave no partial state behind."""
+    ValueErrors) and leave no partial state behind.  Since PR 8 the
+    validation type is :class:`ValidationError` (still a ValueError, so
+    pre-hierarchy handlers keep working)."""
     svc = DDMService(dims=2, capacity=8)
-    with pytest.raises(ValueError,                  # lo > hi in the block
+    with pytest.raises(ValidationError,             # lo > hi in the block
                        match=r"malformed region at row 1\b"):
         svc.register_subscriptions(np.array([[0.0, 1.0], [0.0, 5.0]]),
                                    np.array([[1.0, 2.0], [1.0, 2.0]]))
-    with pytest.raises(ValueError, match=r"must be \(b, 2\)"):  # wrong width
+    with pytest.raises(ValidationError, match=r"must be \(b, 2\)"):
         svc.register_updates(np.zeros((3, 3)), np.ones((3, 3)))
-    with pytest.raises(ValueError,                  # NaN fails lo <= hi
+    with pytest.raises(ValidationError,             # NaN fails lo <= hi
                        match=r"malformed region at row 0\b"):
         svc.register_updates(np.array([[np.nan, 0.0]]),
                              np.array([[1.0, 1.0]]))
@@ -121,15 +123,15 @@ def test_bulk_validation_leaves_no_debris():
                        match=r"region 99 not registered"):
         svc.move_subscriptions(np.array([int(sids[0]), 99]),
                                np.zeros((2, 2)), np.ones((2, 2)))
-    with pytest.raises(ValueError,                  # repeated rid in one call
+    with pytest.raises(ValidationError,             # repeated rid in one call
                        match=rf"region {int(sids[0])} repeated"):
         svc.unregister_subscriptions(np.array([int(sids[0]), int(sids[0])]))
-    with pytest.raises(ValueError,                  # rids/bounds mismatch
+    with pytest.raises(ValidationError,             # rids/bounds mismatch
                        match=r"2 rids but bounds for 3 regions"):
         svc.move_subscriptions(sids, np.zeros((3, 2)), np.ones((3, 2)))
     # a malformed *move* knows which rid each row belongs to — the message
     # must carry it, not just the row index
-    with pytest.raises(ValueError,
+    with pytest.raises(ValidationError,
                        match=rf"row 1 \(rid {int(sids[1])}\)"):
         svc.move_subscriptions(sids, np.array([[0.0, 0.0], [0.0, 5.0]]),
                                np.array([[1.0, 1.0], [1.0, 2.0]]))

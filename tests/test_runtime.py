@@ -196,8 +196,8 @@ def test_service_stats_surface():
     rng = np.random.RandomState(1)
     slo = rng.rand(25, 2).astype(np.float32)
     ulo = rng.rand(35, 2).astype(np.float32)
-    svc.register_subscriptions(slo, slo + 0.4)
-    svc.register_updates(ulo, ulo + 0.4)
+    svc.register("sub", slo, slo + 0.4)
+    svc.register("upd", ulo, ulo + 0.4)
     n_pairs = len(svc.all_pairs())
     snap = svc.stats()
     assert snap["calls"] >= 1
