@@ -1,0 +1,36 @@
+"""Repo-specific static analysis — machine-checked invariants (DESIGN.md §12).
+
+Generic linters cannot see the invariants this repo actually relies on:
+the ONE pow2 capacity ladder living in ``core/runtime.py``, the
+``DDMError`` exception hierarchy, jit-hygiene rules that keep the bench
+gate's zero-recompile promise honest, and the broker's lock discipline.
+This package makes them CI gates:
+
+* :mod:`repro.analysis.rules` — the ``Rule`` protocol + self-populating
+  registry (mirroring :mod:`repro.testing.conformance`: registering a
+  rule is the only step needed to get it run and self-checked).
+* :mod:`repro.analysis.jax_rules` — JAX hygiene (traced-value branching
+  and host syncs inside jitted/Pallas bodies, pow2-ladder arithmetic
+  outside the blessed ``core/runtime.py`` home, int32-suspect
+  accumulation).
+* :mod:`repro.analysis.lock_rules` — the broker lock-discipline checker:
+  a ``GUARDED_BY`` map parsed against the file's ``with <lock>:``
+  acquisition graph (unguarded writes, lock-order cycles).
+* :mod:`repro.analysis.api_rules` — API/error conformance (no bare
+  ``ValueError``/``RuntimeError`` raises outside ``core/errors.py``, no
+  deprecated per-side service shims outside their definition site, no
+  tracked bytecode).
+* :mod:`repro.analysis.lockcheck` — the runtime twin of the static lock
+  checker: TSan-lite :class:`CheckedLock`/:class:`CheckedCondition` that
+  ``Broker(debug_locks=True)`` swaps in.
+* :mod:`repro.analysis.check` — the CLI:
+  ``python -m repro.analysis.check [--json] [--baseline ...] [--regen]
+  [--self-check]``.
+
+Import-light (stdlib only): the analyzer never imports the code it
+checks, so it runs in CI without jax.
+"""
+from repro.analysis.model import Finding, SourceFile  # noqa: F401
+from repro.analysis.rules import Rule, all_rules, get_rule, register  # noqa: F401
+
+__all__ = ["Finding", "SourceFile", "Rule", "all_rules", "get_rule", "register"]

@@ -1,0 +1,112 @@
+"""API/error-conformance + repo-hygiene rules (API001, API002, REPO001).
+
+* ``API001`` — no bare ``raise ValueError``/``raise RuntimeError`` in
+  ``src/`` outside ``core/errors.py``: every deliberate failure must
+  descend from :class:`repro.core.errors.DDMError` so the trust
+  boundary can catch one base type (``ValidationError`` *is-a*
+  ``ValueError``, so converting a raise is never a caller break).
+* ``API002`` — no references to the twelve deprecated per-side
+  ``DDMService`` shims outside their definition site
+  (``core/service.py``); production code uses the unified
+  ``register/move/unregister(side, ...)`` surface.  The shims' own
+  regression tests (``tests/test_api_facade.py`` and the pre-migration
+  suites) live under ``tests/``, outside the analyzer's ``src/`` scan.
+* ``REPO001`` — no tracked bytecode/cache artifacts (``__pycache__``,
+  ``*.pyc``, ``.egg-info``): a repo rule over ``git ls-files``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Sequence
+
+from repro.analysis.model import Finding, SourceFile
+from repro.analysis.rules import Rule, register
+
+_BARE_TYPES = {"ValueError", "RuntimeError"}
+_ERRORS_HOME = "core/errors.py"
+
+# the twelve PR-8 per-side/per-arity shims (DESIGN.md §11 migration table)
+DEPRECATED_SHIMS = frozenset({
+    "register_subscription", "register_update",
+    "move_subscription", "move_update",
+    "unregister_subscription", "unregister_update",
+    "register_subscriptions", "register_updates",
+    "move_subscriptions", "move_updates",
+    "unregister_subscriptions", "unregister_updates",
+})
+_SHIM_HOME = "core/service.py"
+
+_CACHE_MARKERS = ("__pycache__/", ".egg-info/")
+_CACHE_SUFFIXES = (".pyc", ".pyo")
+
+
+def _check_bare_raise(sf: SourceFile) -> List[Finding]:
+    if sf.path.endswith(_ERRORS_HOME):
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Raise) or node.exc is None:
+            continue
+        exc = node.exc
+        name = None
+        if isinstance(exc, ast.Call) and isinstance(exc.func, ast.Name):
+            name = exc.func.id
+        elif isinstance(exc, ast.Name):
+            name = exc.id
+        if name in _BARE_TYPES:
+            out.append(Finding(
+                "API001", sf.path, node.lineno,
+                f"bare `raise {name}` — raise a repro.core.errors."
+                "DDMError subclass instead (ValidationError is-a "
+                "ValueError, CapacityError/OverloadError are "
+                "RuntimeErrors, so callers keep working)"))
+    return out
+
+
+def _check_deprecated_shims(sf: SourceFile) -> List[Finding]:
+    if sf.path.endswith(_SHIM_HOME):
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(sf.tree):
+        name = None
+        if isinstance(node, ast.Attribute) and node.attr in DEPRECATED_SHIMS:
+            name = node.attr
+        elif isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name in DEPRECATED_SHIMS:
+                    name = alias.name
+        if name is not None:
+            out.append(Finding(
+                "API002", sf.path, node.lineno,
+                f"deprecated per-side shim `{name}` — use the unified "
+                "register/move/unregister(side, ...) surface "
+                "(repro.api, DESIGN.md §11)"))
+    return out
+
+
+def check_tracked_artifacts(tracked_paths: Sequence[str]) -> List[Finding]:
+    out: List[Finding] = []
+    for path in tracked_paths:
+        if any(m in path for m in _CACHE_MARKERS) \
+                or path.endswith(_CACHE_SUFFIXES):
+            out.append(Finding(
+                "REPO001", path, 0,
+                "tracked bytecode/cache artifact — `git rm --cached` it; "
+                "__pycache__/ and *.pyc belong in .gitignore"))
+    return out
+
+
+register(Rule(
+    rule_id="API001", name="ddm-error-hierarchy",
+    description="bare ValueError/RuntimeError raise outside "
+                "core/errors.py (must use the DDMError hierarchy)",
+    check_file=_check_bare_raise))
+register(Rule(
+    rule_id="API002", name="no-deprecated-shims",
+    description="reference to a deprecated per-side DDMService shim "
+                "outside its definition site",
+    check_file=_check_deprecated_shims))
+register(Rule(
+    rule_id="REPO001", name="no-tracked-bytecode",
+    description="tracked __pycache__/*.pyc/egg-info artifacts",
+    check_repo=check_tracked_artifacts))

@@ -1,0 +1,261 @@
+"""CLI driver: ``python -m repro.analysis.check``.
+
+Modes:
+
+* default — scan ``src/`` with every registered rule (plus the repo
+  rules over ``git ls-files``), subtract the committed baseline, exit
+  nonzero on any new finding *or* any stale baseline entry (a fixed
+  finding must be removed from the baseline deliberately via
+  ``--regen``).  Baseline entries under the gated scopes
+  (``src/repro/{analysis,core,frontend,kernels,testing}``) are a hard
+  configuration error — that tree is zero-findings forever.
+* ``--paths f.py ...`` — run the file rules over explicit files (the
+  fixture-level entry point; exit nonzero iff findings).
+* ``--self-check`` — every registered rule must catch its seeded
+  violation in ``tests/analysis_fixtures/`` at exactly the lines marked
+  ``# EXPECT: <RULE_ID>`` (the fuzzer's ``--self-check`` idea applied
+  to the analyzer: a rule that cannot catch its own fixture is dead
+  weight and fails CI).
+
+Exit codes: 0 clean · 1 findings/stale baseline/self-check failure ·
+2 configuration error (bad baseline, unknown rule, missing fixtures).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import subprocess
+import sys
+from collections import Counter
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis import model, rules
+from repro.analysis.model import BaselineError, Finding, SourceFile
+
+SCAN_DIRS = ("src",)
+EXCLUDE_PARTS = {"__pycache__"}
+EXCLUDE_PREFIXES = ("src/momo609",)
+DEFAULT_BASELINE = "tests/analysis_baseline.json"
+DEFAULT_FIXTURES = "tests/analysis_fixtures"
+_EXPECT_RE = re.compile(r"#\s*EXPECT:\s*([A-Z]+[0-9]+)")
+
+
+def iter_source_files(root: pathlib.Path) -> List[pathlib.Path]:
+    out: List[pathlib.Path] = []
+    for scan in SCAN_DIRS:
+        base = root / scan
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            if EXCLUDE_PARTS & set(path.parts):
+                continue
+            if rel.startswith(EXCLUDE_PREFIXES):
+                continue
+            out.append(path)
+    return out
+
+
+def git_tracked_paths(root: pathlib.Path) -> List[str]:
+    try:
+        proc = subprocess.run(
+            ["git", "ls-files"], cwd=root, capture_output=True,
+            text=True, timeout=60, check=True)
+    except (OSError, subprocess.SubprocessError):
+        return []                     # not a git checkout: repo rules skip
+    return proc.stdout.splitlines()
+
+
+def collect_findings(root: pathlib.Path,
+                     rule_ids: Optional[Sequence[str]] = None,
+                     ) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in iter_source_files(root):
+        sf = SourceFile.load(path, root)
+        findings.extend(rules.run_file_rules(sf, rule_ids))
+    tracked = git_tracked_paths(root)
+    for rule_id, rule in rules.all_rules().items():
+        if rule.kind != "repo":
+            continue
+        if rule_ids is not None and rule_id not in rule_ids:
+            continue
+        findings.extend(rule.check_repo(tracked))
+    return sorted(findings)
+
+
+def check_paths(paths: Sequence[pathlib.Path], root: pathlib.Path,
+                rule_ids: Optional[Sequence[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in paths:
+        sf = SourceFile.load(path, root)
+        findings.extend(rules.run_file_rules(sf, rule_ids))
+    return sorted(findings)
+
+
+# ---------------------------------------------------------------------------
+# self-check: every rule must catch its seeded fixture
+# ---------------------------------------------------------------------------
+
+def _expected_markers(path: pathlib.Path) -> List[Tuple[str, int]]:
+    out = []
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        for m in _EXPECT_RE.finditer(line):
+            out.append((m.group(1), lineno))
+    return out
+
+
+def self_check(root: pathlib.Path, fixtures: pathlib.Path) -> int:
+    """Exit code of the analyzer-teeth check (0 = every rule bites)."""
+    registry = rules.all_rules()
+    failures: List[str] = []
+    caught: Dict[str, int] = {rule_id: 0 for rule_id in registry}
+    fixture_files = sorted(fixtures.glob("*.py"))
+    if not fixture_files:
+        print(f"self-check: no fixtures under {fixtures}", file=sys.stderr)
+        return 2
+    for path in fixture_files:
+        expected = Counter(_expected_markers(path))
+        got = Counter((f.rule_id, f.line)
+                      for f in check_paths([path], root))
+        for key, n in expected.items():
+            caught[key[0]] = caught.get(key[0], 0) + min(n, got.get(key, 0))
+        if expected != got:
+            missing = expected - got
+            surprise = got - expected
+            rel = path.relative_to(root).as_posix()
+            for (rule_id, line), n in sorted(missing.items()):
+                failures.append(
+                    f"{rel}:{line}: seeded {rule_id} violation NOT caught "
+                    f"({n}x)")
+            for (rule_id, line), n in sorted(surprise.items()):
+                failures.append(
+                    f"{rel}:{line}: unexpected {rule_id} finding ({n}x) — "
+                    "add an `# EXPECT:` marker or fix the rule")
+    # repo rules cannot be seeded as fixture files: feed a synthetic tree
+    from repro.analysis.api_rules import check_tracked_artifacts
+    synthetic = ["src/ok.py", "pkg/__pycache__/mod.cpython-310.pyc",
+                 "stale.pyc"]
+    if len(check_tracked_artifacts(synthetic)) == 2:
+        caught["REPO001"] = caught.get("REPO001", 0) + 2
+    else:
+        failures.append("REPO001 failed its synthetic tracked-bytecode "
+                        "self-check")
+    for rule_id, hits in sorted(caught.items()):
+        if hits == 0:
+            failures.append(
+                f"rule {rule_id} caught no seeded violation — add a "
+                f"fixture under {fixtures.relative_to(root).as_posix()}/ "
+                f"with `# EXPECT: {rule_id}` markers")
+    if failures:
+        print("\n".join(failures), file=sys.stderr)
+        print(f"self-check: FAILED ({len(failures)} problems)",
+              file=sys.stderr)
+        return 1
+    total = sum(caught.values())
+    print(f"self-check: OK — {len(registry)} rules, "
+          f"{len(fixture_files)} fixtures, {total} seeded violations "
+          "all caught at their expected lines")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def _emit(findings: Sequence[Finding], as_json: bool) -> None:
+    if as_json:
+        print(json.dumps([f.as_dict() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="Repo-specific static analysis (DESIGN.md §12)")
+    parser.add_argument("--root", type=pathlib.Path,
+                        default=pathlib.Path.cwd(),
+                        help="repo root (default: cwd)")
+    parser.add_argument("--baseline", type=pathlib.Path, default=None,
+                        help=f"baseline file (default {DEFAULT_BASELINE})")
+    parser.add_argument("--regen", action="store_true",
+                        help="rewrite the baseline from current findings")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="emit findings as JSON")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated rule IDs to run (default all)")
+    parser.add_argument("--paths", nargs="*", type=pathlib.Path,
+                        default=None,
+                        help="check explicit files instead of src/ "
+                             "(no baseline)")
+    parser.add_argument("--self-check", action="store_true",
+                        help="verify every rule catches its seeded fixture")
+    parser.add_argument("--fixtures", type=pathlib.Path, default=None,
+                        help=f"fixture dir (default {DEFAULT_FIXTURES})")
+    args = parser.parse_args(argv)
+
+    root = args.root.resolve()
+    rule_ids = None
+    if args.rules:
+        rule_ids = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = set(rule_ids) - set(rules.all_rules())
+        if unknown:
+            print(f"unknown rule IDs: {sorted(unknown)} "
+                  f"(have {sorted(rules.all_rules())})", file=sys.stderr)
+            return 2
+
+    if args.self_check:
+        return self_check(root, args.fixtures or root / DEFAULT_FIXTURES)
+
+    if args.paths is not None:
+        findings = check_paths(args.paths, root, rule_ids)
+        _emit(findings, args.as_json)
+        return 1 if findings else 0
+
+    findings = collect_findings(root, rule_ids)
+    baseline_path = args.baseline or root / DEFAULT_BASELINE
+
+    if args.regen:
+        try:
+            model.save_baseline(baseline_path, findings)
+        except BaselineError as exc:
+            print(exc, file=sys.stderr)
+            return 2
+        print(f"baseline regenerated: {len(findings)} findings -> "
+              f"{baseline_path}")
+        return 0
+
+    baseline: List[Finding] = []
+    if baseline_path.exists():
+        try:
+            baseline = model.load_baseline(baseline_path)
+        except BaselineError as exc:
+            print(exc, file=sys.stderr)
+            return 2
+
+    new, stale = model.apply_baseline(findings, baseline)
+    _emit(new, args.as_json)
+    status = 0
+    if new:
+        print(f"\n{len(new)} finding(s) not covered by the baseline",
+              file=sys.stderr)
+        status = 1
+    if stale:
+        for entry in stale:
+            print(f"stale baseline entry (finding fixed): {entry.render()}",
+                  file=sys.stderr)
+        print("baseline shrank — rerun with --regen to commit the "
+              "improvement", file=sys.stderr)
+        status = 1
+    if status == 0 and not args.as_json:
+        n_rules = len(rule_ids or rules.all_rules())
+        print(f"analysis clean: {n_rules} rules, "
+              f"{len(findings)} baselined finding(s), 0 new")
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

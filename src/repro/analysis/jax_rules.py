@@ -1,0 +1,365 @@
+"""JAX hygiene rules (JAX001–JAX004).
+
+The repo's perf story leans on two jit facts the bench gate enforces at
+run time (zero retries / zero recompiles after warmup, DESIGN.md §10);
+these rules catch the classic ways of breaking them at *commit* time:
+
+* ``JAX001`` — Python ``if``/``while`` branching on a traced value
+  inside a jitted/Pallas body (TracerBoolConversionError at best,
+  silent per-value recompile churn via forgotten static args at worst).
+* ``JAX002`` — host syncs (``.item()``, ``int(...)``, ``np.asarray``)
+  inside jitted bodies: each one is a device→host round trip that
+  serializes the pipeline.
+* ``JAX003`` — pow2/ladder capacity arithmetic (``1 << n``, ``2 ** n``
+  with computed exponents, ``.bit_length()``) outside
+  ``core/runtime.py``: the repo invariant since PR 7 is ONE ladder, so
+  two counts in the same bucket can never compile twice.
+* ``JAX004`` — ``cumsum``/``sum`` over visibly-int32 operands without an
+  explicit ``dtype``: int32 accumulation silently wraps at 2³¹ (the
+  exact bug class PR 2 fixed with the 16-bit-lane split in
+  ``core/sweep.py`` — that blessed path is exempt).
+
+Traced-ness is decided statically and conservatively: a jitted
+function's parameters are traced unless named in ``static_argnames`` /
+positioned in ``static_argnums``; locals assigned from traced
+expressions inherit it; shape/dtype metadata (``x.shape``, ``x.ndim``,
+``len(x)``, ``isinstance``) is static under trace and never flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.model import Finding, SourceFile
+from repro.analysis.rules import Rule, register
+
+# attribute reads that are static metadata under jax tracing
+# (ndim_space/size are Extents properties derived from .shape)
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "ndim_space"}
+# calls whose result is static (host-side) even over traced args
+_STATIC_CALLS = {"len", "isinstance", "issubclass", "type", "getattr",
+                 "hasattr", "callable", "id", "repr"}
+_HOST_CASTS = {"int", "float", "bool", "complex"}
+_NUMPY_MODULES = {"np", "numpy", "onp"}
+_INT_NARROW = {"int32", "int16", "int8", "uint32", "uint16", "uint8"}
+
+# the one module allowed to own ladder arithmetic, and the exact-count
+# lane-split path allowed to sum int32 without a widening dtype
+_LADDER_HOME = "core/runtime.py"
+_BLESSED_INT32_SUMS = {("core/sweep.py", "_lane_partial_sums")}
+
+
+# ---------------------------------------------------------------------------
+# jitted-function discovery
+# ---------------------------------------------------------------------------
+
+def _dotted_tail(node: ast.expr) -> str:
+    """'jax.jit' → 'jit', 'functools.partial' → 'partial', 'jit' → 'jit'."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _static_names_from_call(call: ast.Call) -> Tuple[Set[str], Set[int]]:
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+        if kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    nums.add(n.value)
+    return names, nums
+
+
+def _jit_decoration(dec: ast.expr) -> Optional[Tuple[Set[str], Set[int]]]:
+    """(static_argnames, static_argnums) if the decorator jit-compiles."""
+    if _dotted_tail(dec) == "jit":                      # @jax.jit / @jit
+        return set(), set()
+    if isinstance(dec, ast.Call):
+        tail = _dotted_tail(dec.func)
+        if tail == "jit":                               # @jax.jit(static_...)
+            return _static_names_from_call(dec)
+        if tail == "partial" and dec.args \
+                and _dotted_tail(dec.args[0]) == "jit":  # @partial(jax.jit,…)
+            return _static_names_from_call(dec)
+    return None
+
+
+def _pallas_kernel_names(tree: ast.Module) -> Set[str]:
+    """Function names passed as the kernel argument of a pallas_call."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _dotted_tail(node.func) == "pallas_call":
+            if node.args and isinstance(node.args[0], ast.Name):
+                names.add(node.args[0].id)
+            for kw in node.keywords:
+                if kw.arg == "kernel" and isinstance(kw.value, ast.Name):
+                    names.add(kw.value.id)
+    return names
+
+
+def iter_traced_functions(tree: ast.Module) -> Iterator[Tuple[ast.FunctionDef, Set[str]]]:
+    """Yield ``(funcdef, traced_param_names)`` for every jitted or
+    Pallas-kernel function in the module (at any nesting depth)."""
+    kernels = _pallas_kernel_names(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        static_names: Optional[Set[str]] = None
+        static_nums: Set[int] = set()
+        for dec in node.decorator_list:
+            jd = _jit_decoration(dec)
+            if jd is not None:
+                static_names, static_nums = jd
+                break
+        if static_names is None and node.name not in kernels:
+            continue
+        static_names = static_names or set()
+        args = node.args
+        positional = [a.arg for a in args.posonlyargs + args.args]
+        traced = set(positional + [a.arg for a in args.kwonlyargs])
+        traced -= static_names
+        traced -= {positional[i] for i in static_nums if i < len(positional)}
+        yield node, traced
+
+
+# ---------------------------------------------------------------------------
+# static-expression evaluation under trace
+# ---------------------------------------------------------------------------
+
+def _is_static_expr(node: ast.expr, traced: Set[str]) -> bool:
+    """Whether an expression is host-static inside a traced body."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id not in traced
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return True
+        return _is_static_expr(node.value, traced)
+    if isinstance(node, ast.Call):
+        if _dotted_tail(node.func) in _STATIC_CALLS:
+            return True
+        parts = [node.func, *node.args] + [kw.value for kw in node.keywords]
+        return all(_is_static_expr(p, traced) for p in parts)
+    if isinstance(node, ast.Subscript):
+        return _is_static_expr(node.value, traced)
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return all(_is_static_expr(e, traced) for e in node.elts)
+    if isinstance(node, ast.BoolOp):
+        return all(_is_static_expr(v, traced) for v in node.values)
+    if isinstance(node, ast.BinOp):
+        return _is_static_expr(node.left, traced) \
+            and _is_static_expr(node.right, traced)
+    if isinstance(node, ast.UnaryOp):
+        return _is_static_expr(node.operand, traced)
+    if isinstance(node, ast.Compare):
+        # identity tests (`x is None`) are concrete even on tracers
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return True
+        return _is_static_expr(node.left, traced) \
+            and all(_is_static_expr(c, traced) for c in node.comparators)
+    if isinstance(node, ast.IfExp):
+        return all(_is_static_expr(e, traced)
+                   for e in (node.test, node.body, node.orelse))
+    return False
+
+
+def _propagate_traced(fn: ast.FunctionDef, traced: Set[str]) -> Set[str]:
+    """Locals assigned from traced expressions become traced themselves
+    (one forward pass in source order — enough for straight-line jitted
+    bodies, conservative everywhere else)."""
+    out = set(traced)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and not _is_static_expr(node.value, out):
+            for tgt in node.targets:
+                for n in ast.walk(tgt):
+                    if isinstance(n, ast.Name):
+                        out.add(n.id)
+    return out
+
+
+def _own_statements(fn: ast.FunctionDef) -> Iterator[ast.stmt]:
+    """Statements of ``fn`` excluding nested function/class bodies (a
+    nested def is analyzed on its own if it is itself jitted)."""
+    stack: List[ast.stmt] = list(fn.body)
+    while stack:
+        stmt = stack.pop()
+        yield stmt
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.stmt):
+                stack.append(child)
+            else:  # expressions can nest statements only via comprehensions
+                stack.extend(s for s in ast.walk(child)
+                             if isinstance(s, ast.stmt))
+
+
+# ---------------------------------------------------------------------------
+# JAX001 — traced-value branching in jitted bodies
+# ---------------------------------------------------------------------------
+
+def _check_traced_branch(sf: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+    for fn, traced in iter_traced_functions(sf.tree):
+        if not traced:
+            continue
+        traced = _propagate_traced(fn, traced)
+        for stmt in _own_statements(fn):
+            if isinstance(stmt, (ast.If, ast.While)) \
+                    and not _is_static_expr(stmt.test, traced):
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                out.append(Finding(
+                    "JAX001", sf.path, stmt.lineno,
+                    f"Python `{kind}` branches on a traced value inside "
+                    f"jitted `{fn.name}` — use lax.cond/select/where, or "
+                    "mark the argument static"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JAX002 — host syncs in jitted bodies
+# ---------------------------------------------------------------------------
+
+def _check_host_sync(sf: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+    for fn, traced in iter_traced_functions(sf.tree):
+        traced = _propagate_traced(fn, traced)
+        for stmt in _own_statements(fn):
+            for node in ast.walk(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                msg = None
+                func = node.func
+                if isinstance(func, ast.Attribute) and func.attr == "item":
+                    msg = "`.item()` forces a device→host sync"
+                elif isinstance(func, ast.Name) and func.id in _HOST_CASTS \
+                        and node.args \
+                        and not _is_static_expr(node.args[0], traced):
+                    msg = (f"`{func.id}(...)` on a traced value forces a "
+                           "device→host sync")
+                elif isinstance(func, ast.Attribute) \
+                        and func.attr in ("asarray", "array") \
+                        and isinstance(func.value, ast.Name) \
+                        and func.value.id in _NUMPY_MODULES \
+                        and node.args \
+                        and not _is_static_expr(node.args[0], traced):
+                    msg = (f"`{func.value.id}.{func.attr}(...)` materializes "
+                           "a traced value on the host")
+                if msg is not None:
+                    out.append(Finding(
+                        "JAX002", sf.path, node.lineno,
+                        f"{msg} inside jitted `{fn.name}` — hoist it out "
+                        "of the jitted body"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JAX003 — pow2 ladder arithmetic outside core/runtime.py
+# ---------------------------------------------------------------------------
+
+def _check_pow2_ladder(sf: SourceFile) -> List[Finding]:
+    if sf.path.endswith(_LADDER_HOME):
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(sf.tree):
+        msg = None
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "bit_length":
+            msg = "`.bit_length()` capacity math"
+        elif isinstance(node, ast.BinOp) \
+                and isinstance(node.left, ast.Constant) \
+                and not isinstance(node.right, ast.Constant):
+            if isinstance(node.op, ast.LShift) and node.left.value == 1:
+                msg = "`1 << <expr>` ladder arithmetic"
+            elif isinstance(node.op, ast.Pow) and node.left.value == 2:
+                msg = "`2 ** <expr>` ladder arithmetic"
+        if msg is not None:
+            out.append(Finding(
+                "JAX003", sf.path, node.lineno,
+                f"{msg} outside core/runtime.py — import "
+                "repro.core.runtime.round_up_pow2 (the ONE ladder) "
+                "instead of re-deriving buckets"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JAX004 — int32-suspect accumulation without an explicit dtype
+# ---------------------------------------------------------------------------
+
+def _mentions_narrow_int(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr in _INT_NARROW:
+            return True
+        if isinstance(n, ast.Name) and n.id in _INT_NARROW:
+            return True
+        if isinstance(n, ast.Constant) and isinstance(n.value, str) \
+                and n.value in _INT_NARROW:
+            return True
+    return False
+
+
+def _enclosing_functions(tree: ast.Module) -> List[Tuple[ast.FunctionDef, int, int]]:
+    spans = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            spans.append((node, node.lineno, node.end_lineno or node.lineno))
+    return spans
+
+
+def _check_int32_accumulation(sf: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+    spans = _enclosing_functions(sf.tree)
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tail = _dotted_tail(node.func)
+        if tail not in ("cumsum", "sum"):
+            continue
+        if any(kw.arg == "dtype" for kw in node.keywords):
+            continue
+        if not _mentions_narrow_int(node):
+            continue
+        blessed = any(
+            sf.path.endswith(path) and fn.name == name
+            and lo <= node.lineno <= hi
+            for path, name in _BLESSED_INT32_SUMS
+            for fn, lo, hi in spans)
+        if blessed:
+            continue
+        out.append(Finding(
+            "JAX004", sf.path, node.lineno,
+            f"`{tail}` over a narrow-int operand without an explicit "
+            "dtype — int32 accumulation wraps at 2^31; pass dtype= or "
+            "route through core/sweep.py's exact lane-split path"))
+    return out
+
+
+register(Rule(
+    rule_id="JAX001", name="traced-branch",
+    description="Python if/while on a traced value inside a jitted or "
+                "Pallas body",
+    check_file=_check_traced_branch))
+register(Rule(
+    rule_id="JAX002", name="host-sync-in-jit",
+    description=".item()/int()/np.asarray host syncs inside jitted bodies",
+    check_file=_check_host_sync))
+register(Rule(
+    rule_id="JAX003", name="pow2-ladder-home",
+    description="pow2/bit_length capacity-ladder arithmetic outside "
+                "core/runtime.py",
+    check_file=_check_pow2_ladder))
+register(Rule(
+    rule_id="JAX004", name="int32-accumulation",
+    description="cumsum/sum over narrow ints without an explicit dtype "
+                "(outside the blessed exact-count path)",
+    check_file=_check_int32_accumulation))

@@ -1,0 +1,453 @@
+"""Broker lock-discipline checker (LOCK001/LOCK002).
+
+Any module that declares a top-level ``GUARDED_BY`` map —
+``{"ClassName": {"field": "_lock", ...}, ...}`` — opts into the checker
+(in this repo: ``src/repro/frontend/broker.py``).  The checker parses
+the file into a lock-acquisition graph and verifies, statically:
+
+* **LOCK001** — every write to a guarded field (assignment, augmented
+  assignment, subscript store, or a mutating method call like
+  ``.append``/``.pop``) happens while the owning lock is held.  "Held"
+  means lexically inside ``with <obj>.<lock>:`` (Condition attributes
+  constructed as ``Condition(self._lock)`` alias the underlying lock),
+  or inside a method *proven* to be entered with the lock held: a
+  method whose in-file call sites all hold the lock (computed as a
+  greatest fixpoint over the class's call graph, so helper chains like
+  ``flush → _flush_locked → _record`` verify without annotations).
+  ``__init__`` writes are exempt — the object is not yet shared.
+* **LOCK002** — the nesting relation between locks ("acquired B while
+  holding A", directly or through calls) must be acyclic; a cycle is
+  the classic ABBA deadlock shape.
+
+The runtime twin (:mod:`repro.analysis.lockcheck`) enforces the same
+discipline dynamically under ``Broker(debug_locks=True)``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from repro.analysis.model import Finding, SourceFile
+from repro.analysis.rules import Rule, register
+
+# mutating container methods — calling one on a guarded field is a write
+_MUTATORS = {
+    "append", "appendleft", "extend", "extendleft", "insert", "pop",
+    "popleft", "popitem", "remove", "discard", "clear", "add", "update",
+    "setdefault", "sort", "reverse",
+}
+_LOCK_CTORS = {"RLock", "Lock", "CheckedLock"}
+_CONDITION_CTORS = {"Condition", "CheckedCondition"}
+
+Held = FrozenSet[Tuple[str, str]]          # {(varname, base lock attr)}
+LockNode = Tuple[str, str]                 # (class name or "?", lock attr)
+
+
+def _tail(node: ast.expr) -> str:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _self_attr(node: ast.expr) -> Optional[Tuple[str, str]]:
+    """``<var>.<attr>`` → (var, attr) when <var> is a bare name."""
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+        return node.value.id, node.attr
+    return None
+
+
+@dataclasses.dataclass
+class _Write:
+    var: str
+    field: str
+    node: ast.AST
+    method: str
+    held: Held
+
+
+@dataclasses.dataclass
+class _Call:
+    var: str                    # receiver variable name ("self" or other)
+    name: str                   # method name
+    held: Held
+    method: str                 # enclosing method
+
+
+@dataclasses.dataclass
+class _ClassInfo:
+    name: str
+    guarded: Dict[str, str]                  # field -> owning lock attr
+    aliases: Dict[str, str]                  # condition attr -> lock attr
+    lock_attrs: Set[str]
+    methods: Dict[str, ast.FunctionDef]
+    writes: List[_Write] = dataclasses.field(default_factory=list)
+    calls: List[_Call] = dataclasses.field(default_factory=list)
+    acquisitions: List[Tuple[Held, Tuple[str, str], ast.AST, str]] = \
+        dataclasses.field(default_factory=list)   # (held-before, (var,lock), node, method)
+
+
+def _extract_guarded_by(tree: ast.Module) -> Optional[Dict[str, Dict[str, str]]]:
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "GUARDED_BY":
+                    try:
+                        value = ast.literal_eval(node.value)
+                    except ValueError:
+                        return None
+                    if isinstance(value, dict):
+                        return value
+    return None
+
+
+def _scan_init(cls: ast.ClassDef) -> Tuple[Dict[str, str], Set[str]]:
+    """Condition aliases + lock attributes declared in ``__init__``."""
+    aliases: Dict[str, str] = {}
+    locks: Set[str] = set()
+    for item in cls.body:
+        if not (isinstance(item, ast.FunctionDef) and item.name == "__init__"):
+            continue
+        for node in ast.walk(item):
+            if not isinstance(node, ast.Assign) \
+                    or not isinstance(node.value, ast.Call):
+                continue
+            ctor = _tail(node.value.func)
+            for tgt in node.targets:
+                sa = _self_attr(tgt)
+                if sa is None or sa[0] != "self":
+                    continue
+                if ctor in _LOCK_CTORS:
+                    locks.add(sa[1])
+                elif ctor in _CONDITION_CTORS and node.value.args:
+                    base = _self_attr(node.value.args[0])
+                    if base is not None and base[0] == "self":
+                        aliases[sa[1]] = base[1]
+                        locks.add(base[1])
+    return aliases, locks
+
+
+class _MethodWalker:
+    """Collects writes/calls/lock acquisitions with lexical held-sets."""
+
+    def __init__(self, info: _ClassInfo, global_aliases: Dict[str, str],
+                 global_locks: Set[str]):
+        self.info = info
+        self.global_aliases = global_aliases
+        self.global_locks = global_locks
+
+    def _resolve_lock(self, var: str, attr: str) -> Optional[str]:
+        """Lock base attr if ``<var>.<attr>`` is a known lock/condition."""
+        if var == "self":
+            base = self.info.aliases.get(attr, attr)
+            return base if base in self.info.lock_attrs else None
+        base = self.global_aliases.get(attr, attr)
+        return base if base in self.global_locks else None
+
+    def walk_method(self, method: ast.FunctionDef) -> None:
+        self._method = method.name
+        self._visit_block(method.body, frozenset())
+
+    def _visit_block(self, stmts: List[ast.stmt], held: Held) -> None:
+        for stmt in stmts:
+            self._visit_stmt(stmt, held)
+
+    def _visit_stmt(self, stmt: ast.stmt, held: Held) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return                       # nested scopes analyzed separately
+        if isinstance(stmt, ast.With):
+            inner = set(held)
+            for item in stmt.items:
+                sa = _self_attr(item.context_expr)
+                if sa is not None:
+                    lock = self._resolve_lock(*sa)
+                    if lock is not None:
+                        key = (sa[0], lock)
+                        if key not in inner:
+                            self.info.acquisitions.append(
+                                (frozenset(inner), key, stmt, self._method))
+                        inner.add(key)
+            self._scan_exprs(stmt, held)
+            self._visit_block(stmt.body, frozenset(inner))
+            return
+        self._scan_exprs(stmt, held)
+        for field_name in ("body", "orelse", "finalbody"):
+            blocks = getattr(stmt, field_name, None)
+            if isinstance(blocks, list):
+                self._visit_block([s for s in blocks
+                                   if isinstance(s, ast.stmt)], held)
+        for handler in getattr(stmt, "handlers", []) or []:
+            self._visit_block(handler.body, held)
+
+    def _scan_exprs(self, stmt: ast.stmt, held: Held) -> None:
+        # writes via assignment targets
+        targets: List[ast.expr] = []
+        if isinstance(stmt, ast.Assign):
+            targets = list(stmt.targets)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            targets = [stmt.target]
+        elif isinstance(stmt, ast.Delete):
+            targets = list(stmt.targets)
+        for tgt in targets:
+            for leaf in self._flatten_target(tgt):
+                sa = _self_attr(leaf)
+                if sa is not None:
+                    self.info.writes.append(
+                        _Write(sa[0], sa[1], leaf, self._method, held))
+        # writes via mutator calls + the call graph, from any expression
+        # hanging off this statement (but not nested statements' own)
+        for node in ast.iter_child_nodes(stmt):
+            if isinstance(node, ast.stmt):
+                continue
+            for call in [n for n in ast.walk(node)
+                         if isinstance(n, ast.Call)]:
+                func = call.func
+                if not isinstance(func, ast.Attribute):
+                    continue
+                if func.attr in _MUTATORS:
+                    sa = _self_attr(func.value)
+                    if sa is not None:
+                        self.info.writes.append(
+                            _Write(sa[0], sa[1], call, self._method, held))
+                sa = _self_attr(func)
+                if sa is not None:
+                    self.info.calls.append(
+                        _Call(sa[0], sa[1], held, self._method))
+
+    @staticmethod
+    def _flatten_target(tgt: ast.expr) -> List[ast.expr]:
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            out: List[ast.expr] = []
+            for e in tgt.elts:
+                out.extend(_MethodWalker._flatten_target(e))
+            return out
+        if isinstance(tgt, (ast.Subscript, ast.Starred)):
+            return _MethodWalker._flatten_target(tgt.value)
+        return [tgt]
+
+
+def _holds(held: Held, var: str, lock: str,
+           info: _ClassInfo, global_aliases: Dict[str, str]) -> bool:
+    if (var, lock) in held:
+        return True
+    # `with self._space:` while checking the `_lock` guard: alias-resolve
+    for hv, hl in held:
+        base = (info.aliases.get(hl, hl) if hv == "self"
+                else global_aliases.get(hl, hl))
+        if hv == var and base == lock:
+            return True
+    return False
+
+
+def _entered_held_fixpoint(info: _ClassInfo, lock: str,
+                           global_aliases: Dict[str, str]) -> Dict[str, bool]:
+    """Greatest fixpoint of "every in-file call site holds ``lock``"."""
+    sites: Dict[str, List[Tuple[str, bool]]] = {}
+    for call in info.calls:
+        if call.var == "self" and call.name in info.methods:
+            sites.setdefault(call.name, []).append(
+                (call.method,
+                 _holds(call.held, "self", lock, info, global_aliases)))
+    entered = {name: bool(sites.get(name)) for name in info.methods}
+    changed = True
+    while changed:
+        changed = False
+        for name in info.methods:
+            if not entered[name]:
+                continue
+            ok = all(held or entered.get(caller, False)
+                     for caller, held in sites.get(name, []))
+            if not ok:
+                entered[name] = False
+                changed = True
+    return entered
+
+
+def check_lock_discipline(sf: SourceFile) -> List[Finding]:
+    guarded_by = _extract_guarded_by(sf.tree)
+    if not guarded_by:
+        return []
+    findings: List[Finding] = []
+    class_defs = {n.name: n for n in sf.tree.body
+                  if isinstance(n, ast.ClassDef)}
+
+    infos: Dict[str, _ClassInfo] = {}
+    global_aliases: Dict[str, str] = {}
+    global_locks: Set[str] = set()
+    for cname, cdef in class_defs.items():
+        aliases, locks = _scan_init(cdef)
+        gmap = {str(k): str(v) for k, v in guarded_by.get(cname, {}).items()}
+        locks |= set(gmap.values())
+        infos[cname] = _ClassInfo(
+            name=cname, guarded=gmap, aliases=aliases, lock_attrs=locks,
+            methods={m.name: m for m in cdef.body
+                     if isinstance(m, ast.FunctionDef)})
+        global_aliases.update(aliases)
+        global_locks |= locks
+
+    for cname in guarded_by:
+        if cname not in class_defs:
+            findings.append(Finding(
+                "LOCK001", sf.path, 1,
+                f"GUARDED_BY names class {cname!r} which does not exist "
+                "in this module"))
+
+    for info in infos.values():
+        walker = _MethodWalker(info, global_aliases, global_locks)
+        for method in info.methods.values():
+            walker.walk_method(method)
+
+    # field -> owning lock across every class (for writes via foreign vars)
+    any_guard: Dict[str, str] = {}
+    for info in infos.values():
+        any_guard.update(info.guarded)
+
+    # ---- LOCK001: unguarded writes ------------------------------------
+    for info in infos.values():
+        entered_cache: Dict[str, Dict[str, bool]] = {}
+        for write in info.writes:
+            if write.method == "__init__" and write.var == "self":
+                continue
+            if write.var == "self":
+                lock = info.guarded.get(write.field)
+            else:
+                lock = any_guard.get(write.field)
+            if lock is None:
+                continue
+            if _holds(write.held, write.var, lock, info, global_aliases):
+                continue
+            if write.var == "self":
+                if lock not in entered_cache:
+                    entered_cache[lock] = _entered_held_fixpoint(
+                        info, lock, global_aliases)
+                if entered_cache[lock].get(write.method, False):
+                    continue
+            findings.append(Finding(
+                "LOCK001", sf.path, write.node.lineno,
+                f"write to GUARDED_BY field `{write.var}.{write.field}` "
+                f"without holding `{lock}` (in `{info.name}."
+                f"{write.method}`, and the method is not provably "
+                "entered with the lock held)"))
+
+    # ---- LOCK002: lock-order cycles -----------------------------------
+    def lock_nodes(var: str, lock: str, owner: _ClassInfo) -> List[LockNode]:
+        if var == "self":
+            return [(owner.name, lock)]
+        owners = [i.name for i in infos.values() if lock in i.lock_attrs]
+        return [(o, lock) for o in owners] or [("?", lock)]
+
+    # transitive lock acquisitions per (class, method)
+    acquires: Dict[Tuple[str, str], Set[LockNode]] = {
+        (i.name, m): set() for i in infos.values() for m in i.methods}
+    for info in infos.values():
+        for held_before, (var, lock), _node, method in info.acquisitions:
+            acquires[(info.name, method)].update(
+                lock_nodes(var, lock, info))
+    changed = True
+    while changed:
+        changed = False
+        for info in infos.values():
+            for call in info.calls:
+                callee_keys = ([(info.name, call.name)] if call.var == "self"
+                               else [(i.name, call.name)
+                                     for i in infos.values()
+                                     if call.name in i.methods])
+                key = (info.name, call.method)
+                if key not in acquires:
+                    continue
+                for ck in callee_keys:
+                    extra = acquires.get(ck, set()) - acquires[key]
+                    if extra:
+                        acquires[key].update(extra)
+                        changed = True
+
+    edges: Dict[LockNode, Set[LockNode]] = {}
+    lines: Dict[Tuple[LockNode, LockNode], int] = {}
+
+    def add_edge(a: LockNode, b: LockNode, line: int) -> None:
+        if a != b:
+            edges.setdefault(a, set()).add(b)
+            lines.setdefault((a, b), line)
+
+    for info in infos.values():
+        # direct nesting: an acquisition while other locks are held
+        for held_before, (var, lock), node, _method in info.acquisitions:
+            for b in lock_nodes(var, lock, info):
+                for hv, hl in held_before:
+                    for a in lock_nodes(hv, hl, info):
+                        add_edge(a, b, node.lineno)
+        # acquisition through a call made while holding a lock
+        for call in info.calls:
+            if not call.held:
+                continue
+            callee_keys = ([(info.name, call.name)] if call.var == "self"
+                           else [(i.name, call.name) for i in infos.values()
+                                 if call.name in i.methods])
+            targets: Set[LockNode] = set()
+            for ck in callee_keys:
+                targets |= acquires.get(ck, set())
+            for hv, hl in call.held:
+                for a in lock_nodes(hv, hl, info):
+                    # reentrant same-lock acquisition is not an ordering
+                    for b in targets - {a}:
+                        add_edge(a, b, 1)
+
+    cycle = _find_cycle(edges)
+    if cycle:
+        path = " -> ".join(f"{c}.{a}" for c, a in cycle)
+        line = lines.get((cycle[0], cycle[1]), 1) if len(cycle) > 1 else 1
+        findings.append(Finding(
+            "LOCK002", sf.path, line,
+            f"lock-order cycle (ABBA deadlock shape): {path} -> "
+            f"{cycle[0][0]}.{cycle[0][1]} — pick one global acquisition "
+            "order and release before acquiring against it"))
+    return findings
+
+
+def _find_cycle(edges: Dict[LockNode, Set[LockNode]]) -> List[LockNode]:
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in
+             set(edges) | {b for bs in edges.values() for b in bs}}
+    stack: List[LockNode] = []
+
+    def dfs(n: LockNode) -> Optional[List[LockNode]]:
+        color[n] = GREY
+        stack.append(n)
+        for b in sorted(edges.get(n, ())):
+            if color[b] == GREY:
+                return stack[stack.index(b):]
+            if color[b] == WHITE:
+                found = dfs(b)
+                if found:
+                    return found
+        stack.pop()
+        color[n] = BLACK
+        return None
+
+    for n in sorted(color):
+        if color[n] == WHITE:
+            found = dfs(n)
+            if found:
+                return found
+    return []
+
+
+def _only(rule_id: str):
+    def check(sf: SourceFile) -> List[Finding]:
+        return [f for f in check_lock_discipline(sf)
+                if f.rule_id == rule_id]
+    return check
+
+
+register(Rule(
+    rule_id="LOCK001", name="guarded-write",
+    description="write to a GUARDED_BY field outside its owning lock "
+                "(lock-acquisition graph + entered-held fixpoint)",
+    check_file=_only("LOCK001")))
+register(Rule(
+    rule_id="LOCK002", name="lock-order-cycle",
+    description="cyclic lock-nesting order (ABBA deadlock shape)",
+    check_file=_only("LOCK002")))

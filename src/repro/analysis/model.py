@@ -1,0 +1,142 @@
+"""Findings model + committed-baseline IO for the static analyzer.
+
+A :class:`Finding` is one rule violation at one source location.  Its
+*suppression key* deliberately excludes the line number: a committed
+baseline entry keeps matching while unrelated edits shift the file, but
+a second violation of the same shape in the same file is a new finding
+(the suppression is a multiset, consumed one entry per finding).
+
+The baseline file (``tests/analysis_baseline.json``) may only carry
+findings in the legacy scaffolding; paths under the gated scopes
+(:data:`STRICT_SCOPES`) can never be baselined — the gate for the DDM
+production tree is structurally zero-findings.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+from collections import Counter
+from typing import Dict, List, Sequence, Tuple
+
+# Baseline entries under these path prefixes are a configuration error:
+# the matching/serving tree is gated at zero findings, permanently.
+STRICT_SCOPES = (
+    "src/repro/analysis/",
+    "src/repro/core/",
+    "src/repro/frontend/",
+    "src/repro/kernels/",
+    "src/repro/testing/",
+)
+
+BASELINE_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation: stable rule ID, repo-relative path, 1-based line."""
+
+    rule_id: str
+    path: str
+    line: int
+    message: str
+
+    @property
+    def suppression_key(self) -> Tuple[str, str, str]:
+        """Baseline identity — line-number free so baselines survive
+        unrelated edits to the same file."""
+        return (self.rule_id, self.path, self.message)
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"rule": self.rule_id, "path": self.path,
+                "line": self.line, "message": self.message}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "Finding":
+        return cls(str(d["rule"]), str(d["path"]), int(d["line"]),
+                   str(d["message"]))
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule_id} {self.message}"
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """One parsed source file handed to every file-scoped rule."""
+
+    path: str              # repo-relative, posix separators
+    text: str
+    tree: ast.Module
+
+    @classmethod
+    def load(cls, file_path: pathlib.Path, root: pathlib.Path) -> "SourceFile":
+        text = file_path.read_text(encoding="utf-8")
+        rel = file_path.resolve().relative_to(root.resolve()).as_posix()
+        return cls(path=rel, text=text,
+                   tree=ast.parse(text, filename=str(file_path)))
+
+
+def in_strict_scope(path: str) -> bool:
+    return any(path.startswith(scope) for scope in STRICT_SCOPES)
+
+
+class BaselineError(ValueError):
+    """The committed baseline file itself is invalid (bad JSON, wrong
+    version, or an entry inside a gated scope)."""
+
+
+def load_baseline(path: pathlib.Path) -> List[Finding]:
+    try:
+        data = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as exc:
+        raise BaselineError(f"cannot read baseline {path}: {exc}") from exc
+    if not isinstance(data, dict) or data.get("version") != BASELINE_VERSION:
+        raise BaselineError(
+            f"baseline {path} must be a dict with version={BASELINE_VERSION}")
+    entries = [Finding.from_dict(d) for d in data.get("findings", [])]
+    gated = [f for f in entries if in_strict_scope(f.path)]
+    if gated:
+        listing = "\n  ".join(f.render() for f in gated)
+        raise BaselineError(
+            "baseline entries inside the gated scope are forbidden — fix "
+            f"the findings instead of baselining them:\n  {listing}")
+    return entries
+
+
+def save_baseline(path: pathlib.Path, findings: Sequence[Finding]) -> None:
+    gated = [f for f in findings if in_strict_scope(f.path)]
+    if gated:
+        listing = "\n  ".join(f.render() for f in gated)
+        raise BaselineError(
+            "refusing to write a baseline holding gated-scope findings — "
+            f"fix these instead:\n  {listing}")
+    payload = {
+        "version": BASELINE_VERSION,
+        "findings": [f.as_dict() for f in sorted(findings)],
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n", encoding="utf-8")
+
+
+def apply_baseline(findings: Sequence[Finding], baseline: Sequence[Finding]
+                   ) -> Tuple[List[Finding], List[Finding]]:
+    """Subtract the baseline multiset; returns ``(new, stale)``.
+
+    ``new`` are findings with no matching baseline entry (CI-failing);
+    ``stale`` are baseline entries whose finding no longer exists (the
+    fix landed — CI fails too, with a ``--regen`` hint, so the baseline
+    only ever shrinks deliberately).
+    """
+    budget = Counter(f.suppression_key for f in baseline)
+    new: List[Finding] = []
+    for f in sorted(findings):
+        if budget[f.suppression_key] > 0:
+            budget[f.suppression_key] -= 1
+        else:
+            new.append(f)
+    stale = []
+    for entry in baseline:
+        if budget[entry.suppression_key] > 0:
+            budget[entry.suppression_key] -= 1
+            stale.append(entry)
+    return new, stale

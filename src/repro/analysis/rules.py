@@ -1,0 +1,109 @@
+"""The ``Rule`` protocol + self-populating registry.
+
+Mirrors the conformance-engine pattern of
+:mod:`repro.testing.conformance`: a rule registers itself into a
+module-level registry on import, the driver enumerates
+:func:`all_rules` at run time, and the self-check harness requires every
+registered rule to catch its seeded fixture — there is no second list to
+update when adding a rule.
+
+Two rule kinds:
+
+* **file** rules get a parsed :class:`repro.analysis.model.SourceFile`
+  per scanned file (optionally filtered by ``applies_to``);
+* **repo** rules get the list of git-tracked paths (hygiene checks that
+  are about the repository, not any one file's AST).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.analysis.model import Finding, SourceFile
+from repro.core.errors import ValidationError
+
+FileCheck = Callable[[SourceFile], List[Finding]]
+RepoCheck = Callable[[Sequence[str]], List[Finding]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One machine-checked invariant with a stable ID.
+
+    ``rule_id`` is the permanent name (``JAX001``, ``LOCK002``, …) used
+    by baselines, fixtures and the DESIGN.md rule table; renaming one is
+    a breaking change.  ``check_file`` xor ``check_repo`` must be set.
+    ``applies_to`` (file rules) filters by repo-relative path — rules
+    without it see every scanned file.
+    """
+
+    rule_id: str
+    name: str
+    description: str
+    check_file: Optional[FileCheck] = None
+    check_repo: Optional[RepoCheck] = None
+    applies_to: Optional[Callable[[str], bool]] = None
+
+    def __post_init__(self):
+        if (self.check_file is None) == (self.check_repo is None):
+            raise ValidationError(
+                f"rule {self.rule_id}: exactly one of check_file/"
+                "check_repo must be set")
+
+    @property
+    def kind(self) -> str:
+        return "file" if self.check_file is not None else "repo"
+
+    def run_on_file(self, sf: SourceFile) -> List[Finding]:
+        if self.check_file is None:
+            return []
+        if self.applies_to is not None and not self.applies_to(sf.path):
+            return []
+        return self.check_file(sf)
+
+
+_REGISTRY: Dict[str, Rule] = {}
+_BUILTIN_DONE = False
+
+
+def register(rule: Rule) -> Rule:
+    """Add a rule to the registry (checked + self-checked from now on)."""
+    if rule.rule_id in _REGISTRY:
+        raise ValidationError(f"rule {rule.rule_id!r} already registered")
+    _REGISTRY[rule.rule_id] = rule
+    return rule
+
+
+def unregister(rule_id: str) -> None:
+    _REGISTRY.pop(rule_id, None)
+
+
+def _ensure_builtin() -> None:
+    global _BUILTIN_DONE
+    if _BUILTIN_DONE:
+        return
+    _BUILTIN_DONE = True
+    # importing the rule modules registers their rules (self-population)
+    from repro.analysis import api_rules, jax_rules, lock_rules  # noqa: F401
+
+
+def all_rules() -> Dict[str, Rule]:
+    """rule_id → rule, built-ins auto-discovered on first use."""
+    _ensure_builtin()
+    return dict(sorted(_REGISTRY.items()))
+
+
+def get_rule(rule_id: str) -> Rule:
+    _ensure_builtin()
+    return _REGISTRY[rule_id]
+
+
+def run_file_rules(sf: SourceFile,
+                   rule_ids: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Every applicable file rule over one parsed source file."""
+    out: List[Finding] = []
+    for rule_id, rule in all_rules().items():
+        if rule_ids is not None and rule_id not in rule_ids:
+            continue
+        out.extend(rule.run_on_file(sf))
+    return sorted(out)

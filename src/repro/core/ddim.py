@@ -50,6 +50,7 @@ from repro.core import runtime as runtime_lib
 from repro.core.intervals import Extents, intersect_1d
 from repro.core.runtime import pad_axis as _pad_axis  # noqa: F401 — canonical
 from repro.core.sweep import sbm_count
+from repro.core.errors import ValidationError
 
 
 def _dim_rows(e: Extents) -> Tuple[jax.Array, jax.Array]:
@@ -157,7 +158,7 @@ def enumerate_matches_ddim(
     detects the overflow and the retry returns the exact K.
     """
     if method not in ("sweep", "bitmatrix", "blocked"):
-        raise ValueError(f"unknown method {method!r}")
+        raise ValidationError(f"unknown method {method!r}")
     if subs.size == 0 or upds.size == 0:
         return _empty_result(max_pairs)
     if method == "bitmatrix":
@@ -218,7 +219,7 @@ def enumerate_matches_ddim_planned(
     import time as _time
 
     if method not in ("sweep", "bitmatrix", "blocked"):
-        raise ValueError(f"unknown method {method!r}")
+        raise ValidationError(f"unknown method {method!r}")
     t0 = _time.perf_counter()
     gen = generator_dim
     if subs.size == 0 or upds.size == 0:

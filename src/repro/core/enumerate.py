@@ -314,7 +314,7 @@ def enumerate_matches(subs: Extents, upds: Extents, *, max_pairs: int,
         mask = intersect_1d(b_lo[:, None], b_hi[:, None],
                             upds.lo[None, :], upds.hi[None, :])
         flat = mask.reshape(-1)
-        local_pos = jnp.cumsum(flat.astype(jnp.int32)) - 1
+        local_pos = jnp.cumsum(flat.astype(jnp.int32), dtype=jnp.int32) - 1
         dest = jnp.where(flat, write_ptr + local_pos, max_pairs)  # drop slot
         ii = (b_base + jnp.arange(block, dtype=jnp.int32))[:, None]
         jj = jnp.arange(upds.lo.shape[0], dtype=jnp.int32)[None, :]

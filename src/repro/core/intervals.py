@@ -15,6 +15,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from repro.core.errors import ValidationError
 
 
 @jax.tree_util.register_pytree_node_class
@@ -44,13 +45,13 @@ class Extents:
         """Project onto dimension ``d`` (paper §3: d-dim reduces to 1-dim)."""
         if self.lo.ndim == 1:
             if d != 0:
-                raise ValueError(f"1-d extents have no dimension {d}")
+                raise ValidationError(f"1-d extents have no dimension {d}")
             return self
         return Extents(self.lo[d], self.hi[d])
 
     def validate(self) -> "Extents":
         if self.lo.shape != self.hi.shape:
-            raise ValueError(f"lo/hi shape mismatch: {self.lo.shape} vs {self.hi.shape}")
+            raise ValidationError(f"lo/hi shape mismatch: {self.lo.shape} vs {self.hi.shape}")
         return self
 
 
@@ -78,7 +79,7 @@ def _segment_length(alpha: float, length: float, total: int) -> float:
     """
     seg_len = alpha * length / total
     if seg_len > length:
-        raise ValueError(
+        raise ValidationError(
             f"alpha={alpha} with N={total} regions gives segment length "
             f"{seg_len} > routing space {length} (need alpha <= N); "
             "placement range length - seg_len would be negative")
@@ -158,7 +159,7 @@ def make_tall_thin_workload(
     the bit-matrix AND stay proportional to the true K (DESIGN.md §8).
     """
     if d < 2:
-        raise ValueError("tall-thin needs d >= 2 (one wide + one thin dim)")
+        raise ValidationError("tall-thin needs d >= 2 (one wide + one thin dim)")
     total = n_sub + n_upd
     seg_len = _segment_length(alpha, length, total)
     k_lo, k_wide = jax.random.split(key)

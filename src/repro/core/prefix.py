@@ -23,6 +23,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+from repro.core.errors import ValidationError
 
 
 # --------------------------------------------------------------------------
@@ -46,7 +47,7 @@ def cumsum_two_level(x: jax.Array, num_segments: int) -> jax.Array:
     """
     n = x.shape[-1]
     if n % num_segments:
-        raise ValueError(f"{n=} not divisible by {num_segments=}")
+        raise ValidationError(f"{n=} not divisible by {num_segments=}")
     seg = n // num_segments
     xs = x.reshape(x.shape[:-1] + (num_segments, seg))
     local = jnp.cumsum(xs, axis=-1)                      # step 1 (parallel)

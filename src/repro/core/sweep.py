@@ -36,6 +36,7 @@ from jax import lax
 
 from repro.core import prefix as prefix_lib
 from repro.core.intervals import Extents
+from repro.core.errors import ValidationError
 
 
 class EndpointStream(NamedTuple):
@@ -124,7 +125,7 @@ def resolve_cumsum(scan_impl: str, num_segments: int):
         return prefix_lib.cumsum_blelloch
     if scan_impl == "xla":
         return functools.partial(jnp.cumsum, axis=-1)
-    raise ValueError(f"unknown scan_impl {scan_impl!r}")
+    raise ValidationError(f"unknown scan_impl {scan_impl!r}")
 
 
 _INT32_MAX = (1 << 31) - 1
@@ -339,7 +340,7 @@ def segment_delta_sets(ep: EndpointStream, num_segments: int, n: int, m: int):
     """
     total = ep.values.shape[0]
     if total % num_segments:
-        raise ValueError("stream must be padded to a segment multiple")
+        raise ValidationError("stream must be padded to a segment multiple")
     seg = total // num_segments
     seg_of = jnp.arange(total, dtype=jnp.int32) // seg
     segs = jnp.arange(num_segments, dtype=jnp.int32)

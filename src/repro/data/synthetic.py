@@ -23,6 +23,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.errors import ValidationError
 from repro.core.intervals import (
     Extents,
     make_clustered_workload,
@@ -65,7 +66,7 @@ def ddm_workload(
     if name == "tall_thin":
         return make_tall_thin_workload(key, n_sub, n_upd, alpha=alpha,
                                        length=length, d=d)
-    raise ValueError(f"unknown DDM workload {name!r} "
+    raise ValidationError(f"unknown DDM workload {name!r} "
                      f"(choose from {DDM_WORKLOADS})")
 
 

@@ -209,6 +209,34 @@ def _percentile(window: Sequence[float], q: float) -> float:
     return xs[min(len(xs) - 1, int(q * (len(xs) - 1) + 0.999999))]
 
 
+# Lock-ownership map, machine-checked by `python -m repro.analysis.check`
+# (rule LOCK001, DESIGN.md §12): every write to a field listed here must
+# happen under the named lock — lexically inside `with self._lock:` /
+# `with self._space:` (a Condition alias of `_lock`), or in a method the
+# checker proves is only entered with the lock held (e.g. the
+# `*_locked` helpers).  `Broker(debug_locks=True)` enforces the same map
+# at run time via repro.analysis.lockcheck.
+GUARDED_BY = {
+    "BrokerSession": {
+        "_queue": "_lock",
+        "_flush_seconds": "_lock",
+        "journal": "_lock",
+        "accepted": "_lock",
+        "rejected": "_lock",
+        "shed": "_lock",
+        "expired": "_lock",
+        "failed": "_lock",
+        "applied": "_lock",
+        "flushes": "_lock",
+        "degraded_reads": "_lock",
+        "exact_reads": "_lock",
+    },
+    "Broker": {
+        "_sessions": "_lock",
+    },
+}
+
+
 class BrokerSession:
     """One tenant: a ``DDMService`` plus its queue, lock and metrics.
 
@@ -221,14 +249,21 @@ class BrokerSession:
                  admission: AdmissionPolicy, degrade: DegradePolicy,
                  broker_recorder: Optional[runtime_lib.StatsRecorder] = None,
                  journal: bool = False, latency_window: int = 128,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 lock_registry=None):
         self.name = name
         self._svc = service
         self.admission = admission
         self.degrade = degrade
         self._clock = clock
-        self._lock = threading.RLock()
-        self._space = threading.Condition(self._lock)
+        if lock_registry is not None:       # Broker(debug_locks=True)
+            from repro.analysis.lockcheck import (CheckedCondition,
+                                                  CheckedLock)
+            self._lock = CheckedLock(f"session:{name}", lock_registry)
+            self._space = CheckedCondition(self._lock)
+        else:
+            self._lock = threading.RLock()
+            self._space = threading.Condition(self._lock)
         self._queue: Deque[_Op] = deque()
         self._flush_seconds: Deque[float] = deque(maxlen=latency_window)
         self._recorder = runtime_lib.StatsRecorder()
@@ -338,7 +373,14 @@ class BrokerSession:
         with self._lock:
             return self._flush_locked()
 
+    def _assert_lock_held(self) -> None:
+        # runtime GUARDED_BY check — a no-op outside debug_locks mode
+        assert_held = getattr(self._lock, "assert_held", None)
+        if assert_held is not None:
+            assert_held()
+
     def _flush_locked(self) -> BatchDelta:
+        self._assert_lock_held()
         t0 = time.perf_counter()
         now = self._clock()
         ops = list(self._queue)
@@ -514,13 +556,22 @@ class Broker:
                  degrade: Optional[DegradePolicy] = None,
                  journal: bool = False,
                  flush_interval: Optional[float] = None,
-                 service_factory: Callable[..., DDMService] = DDMService):
+                 service_factory: Callable[..., DDMService] = DDMService,
+                 debug_locks: bool = False):
         self.admission = admission or AdmissionPolicy()
         self.degrade = degrade or DegradePolicy()
         self._journal = journal
         self._factory = service_factory
         self._sessions: Dict[str, BrokerSession] = {}
-        self._lock = threading.Lock()
+        self._lock_registry = None
+        if debug_locks:                     # TSan-lite audited locks
+            from repro.analysis.lockcheck import CheckedLock, LockRegistry
+            self._lock_registry = LockRegistry()
+            # registered first: broker lock ranks before session locks in
+            # the global acquisition order
+            self._lock = CheckedLock("broker", self._lock_registry)
+        else:
+            self._lock = threading.Lock()
         self._recorder = runtime_lib.StatsRecorder(history=256)
         self._flush_interval = flush_interval
         self._flusher: Optional[threading.Thread] = None
@@ -546,7 +597,8 @@ class Broker:
                 admission=admission or self.admission,
                 degrade=degrade or self.degrade,
                 broker_recorder=self._recorder,
-                journal=self._journal)
+                journal=self._journal,
+                lock_registry=self._lock_registry)
             self._sessions[name] = sess
             return sess
 
@@ -632,8 +684,13 @@ class Broker:
         totals["sessions"] = len(per)
         totals["flush_p99_us"] = max(
             (float(s["flush_p99_us"]) for s in per.values()), default=0.0)
-        return {"sessions": per, "totals": totals,
-                "recorder": self._recorder.snapshot()}
+        out = {"sessions": per, "totals": totals,
+               "recorder": self._recorder.snapshot()}
+        if self._lock_registry is not None:
+            # acquisition order, per-lock acquisition/contention counts,
+            # and any recorded discipline violations (debug_locks mode)
+            out["locks"] = self._lock_registry.snapshot()
+        return out
 
 
 def replay_journal(journal: Sequence[dict], *, dims: int = 1,

@@ -58,7 +58,8 @@ def _bitmatch_kernel(s_lo_ref, s_hi_ref, u_lo_ref, u_hi_ref,
     words = prefix_lib.pack_bits(mask)
     words_ref[...] = words
     counts_ref[...] = jnp.sum(
-        lax.population_count(words).astype(jnp.int32), axis=-1, keepdims=True
+        lax.population_count(words).astype(jnp.int32), axis=-1,
+        dtype=jnp.int32, keepdims=True
     )
 
 

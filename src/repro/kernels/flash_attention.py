@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.core.errors import ValidationError
 
 NEG_INF = -1.0e30  # finite mask value: keeps exp() well-defined on dead rows
 _LANES = 128       # m/l scratch replicated across VPU lanes
@@ -118,9 +119,9 @@ def flash_attention_kernel(
     B, H, Sq, D = q.shape
     _, Hkv, Skv, _ = k.shape
     if Sq % block_q or Skv % block_k:
-        raise ValueError(f"{Sq=}/{Skv=} must be multiples of {block_q=}/{block_k=}")
+        raise ValidationError(f"{Sq=}/{Skv=} must be multiples of {block_q=}/{block_k=}")
     if H % Hkv:
-        raise ValueError(f"{H=} must be a multiple of {Hkv=}")
+        raise ValidationError(f"{H=} must be a multiple of {Hkv=}")
     group = H // Hkv
     nq = Sq // block_q
     max_nk = kv_index.shape[1]

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.core.errors import ValidationError
 
 
 # ---------------------------------------------------------------------------
@@ -85,7 +86,7 @@ def sweep_count_pallas(deltas: jax.Array, *, block_size: int = 2048,
     """
     _, total = deltas.shape
     if total % block_size:
-        raise ValueError(f"{total=} not a multiple of {block_size=}")
+        raise ValidationError(f"{total=} not a multiple of {block_size=}")
     num_blocks = total // block_size
 
     # Pass A — paper Fig. 5 step 1 (parallel over blocks).
@@ -173,7 +174,7 @@ def delta_bitmasks_pallas(owner: jax.Array, is_upper: jax.Array,
     """
     total = owner.shape[0]
     if total % block_size:
-        raise ValueError(f"{total=} not a multiple of {block_size=}")
+        raise ValidationError(f"{total=} not a multiple of {block_size=}")
     num_blocks = total // block_size
     owner2 = jnp.clip(owner, 0, None).reshape(1, total)
     add, rem = pl.pallas_call(
@@ -304,7 +305,7 @@ def sweep_emit_pairs_pallas(owner: jax.Array, is_upper: jax.Array,
     """
     total = owner.shape[0]
     if total % block_size:
-        raise ValueError(f"{total=} not a multiple of {block_size=}")
+        raise ValidationError(f"{total=} not a multiple of {block_size=}")
     num_blocks = total // block_size
     ws = sub_active0.shape[1]
     wu = upd_active0.shape[1]

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core.intervals import Extents
 from repro.testing import oracles
+from repro.core.errors import ValidationError
 
 Pair = Tuple[int, int]
 PairSet = Set[Pair]
@@ -57,7 +58,7 @@ _BUILTIN_DONE = False
 def register(engine: MatchEngine) -> MatchEngine:
     """Add an engine to the registry (conformance-tested from now on)."""
     if engine.name in _REGISTRY:
-        raise ValueError(f"engine {engine.name!r} already registered")
+        raise ValidationError(f"engine {engine.name!r} already registered")
     _REGISTRY[engine.name] = engine
     return engine
 
@@ -332,7 +333,7 @@ class _IndexChurnRunner:
 
 def churn_runner(impl: str, dims: int) -> _IndexChurnRunner:
     if impl not in CHURN_IMPLS:
-        raise ValueError(f"unknown churn impl {impl!r} (one of {CHURN_IMPLS})")
+        raise ValidationError(f"unknown churn impl {impl!r} (one of {CHURN_IMPLS})")
     return _IndexChurnRunner(impl, dims)
 
 

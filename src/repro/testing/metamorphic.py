@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.incremental import BatchDelta
 from repro.core.intervals import Extents
+from repro.core.errors import ValidationError
 
 PairRunner = Callable[[Extents, Extents], set]
 
@@ -64,7 +65,7 @@ def scale(e: Extents, factor: float) -> Extents:
 
 def permute_dims(e: Extents, perm: Sequence[int]) -> Extents:
     if e.ndim_space == 1:
-        raise ValueError("dimension permutation needs d > 1")
+        raise ValidationError("dimension permutation needs d > 1")
     p = np.asarray(perm)
     return Extents(e.lo[p, :], e.hi[p, :])
 

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.intervals import Extents
+from repro.core.errors import ValidationError
 
 Predicate = Callable[[Extents, Extents], bool]
 
@@ -70,7 +71,7 @@ def shrink_workload(subs: Extents, upds: Extents, failing: Predicate,
     snapped to an integer, without losing the failure.
     """
     if not _safe(failing, subs, upds):
-        raise ValueError("shrink_workload needs a failing input to start from")
+        raise ValidationError("shrink_workload needs a failing input to start from")
     dims = subs.ndim_space
     sides = [list(_np2(subs)), list(_np2(upds))]
     steps = 0
@@ -138,7 +139,7 @@ def shrink_script(script: List[tuple], failing_script: Callable[[list], bool]
     not-failing, so the result is always a legal minimal script.
     """
     if not _safe(failing_script, script):
-        raise ValueError("shrink_script needs a failing script to start from")
+        raise ValidationError("shrink_script needs a failing script to start from")
     # pass 1: drop whole batches
     i = 0
     while i < len(script):

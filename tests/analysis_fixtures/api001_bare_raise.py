@@ -1,0 +1,19 @@
+"""Seeded API001 violations: bare stdlib raises outside core/errors.py."""
+from repro.core.errors import ValidationError
+
+
+def validate(n):
+    if n < 0:
+        raise ValueError(f"negative: {n}")      # EXPECT: API001
+    return n
+
+
+def run(flag):
+    if not flag:
+        raise RuntimeError("flag required")     # EXPECT: API001
+
+
+def ok_hierarchy(n):
+    if n < 0:
+        raise ValidationError(f"negative: {n}")  # DDMError subclass: clean
+    return n

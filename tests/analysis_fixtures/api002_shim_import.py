@@ -1,0 +1,10 @@
+"""Seeded API002 violations: references to deprecated per-side shims."""
+from repro.core.service import move_subscription   # EXPECT: API002
+
+
+def legacy_register(svc, lo, hi):
+    return svc.register_subscription(lo, hi)       # EXPECT: API002
+
+
+def ok_unified(svc, lo, hi):
+    return svc.register("sub", lo, hi)             # unified surface: clean

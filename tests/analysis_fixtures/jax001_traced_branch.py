@@ -1,0 +1,26 @@
+"""Seeded JAX001 violations: Python control flow on traced values.
+
+Never imported — parsed by `python -m repro.analysis.check --self-check`.
+"""
+import jax
+
+
+@jax.jit
+def bad_clamp(x, lo):
+    if x > lo:                         # EXPECT: JAX001
+        return x
+    return lo
+
+
+@jax.jit
+def bad_loop(x):
+    while x < 10:                      # EXPECT: JAX001
+        x = x + 1
+    return x
+
+
+@jax.jit
+def ok_static_branch(x):
+    if x.ndim == 2:                    # static metadata: no finding
+        return x * 2
+    return x

@@ -1,0 +1,25 @@
+"""Seeded JAX002 violations: host syncs inside jitted bodies."""
+import functools
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def bad_item(x):
+    return x.item()                    # EXPECT: JAX002
+
+
+@jax.jit
+def bad_cast(x):
+    return x * int(x)                  # EXPECT: JAX002
+
+
+@jax.jit
+def bad_materialize(x):
+    return np.asarray(x)               # EXPECT: JAX002
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def ok_static_cast(x, n):
+    return x * int(n)                  # n is static: no finding

@@ -1,0 +1,17 @@
+"""Seeded JAX003 violations: pow2 ladder arithmetic outside its home
+(repro.core.runtime owns the ONE capacity ladder)."""
+
+
+def bad_bucket(n):
+    return 1 << n                      # EXPECT: JAX003
+
+
+def bad_pow(n):
+    return 2 ** n                      # EXPECT: JAX003
+
+
+def bad_bitlength(n):
+    return (n - 1).bit_length()        # EXPECT: JAX003
+
+
+OK_CONST_SHIFT = 1 << 16               # constant shift: no finding

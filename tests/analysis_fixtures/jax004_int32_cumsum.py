@@ -1,0 +1,19 @@
+"""Seeded JAX004 violations: narrow-int accumulation without an
+explicit accumulator dtype (wraps at 2^31)."""
+import jax.numpy as jnp
+
+
+def bad_cumsum(mask):
+    return jnp.cumsum(mask.astype(jnp.int32))            # EXPECT: JAX004
+
+
+def bad_sum(counts):
+    return jnp.sum(counts.astype(jnp.uint16), axis=-1)   # EXPECT: JAX004
+
+
+def ok_widened(mask):
+    return jnp.cumsum(mask.astype(jnp.int32), dtype=jnp.int64)
+
+
+def ok_float(x):
+    return jnp.sum(x, axis=0)          # no narrow-int operand: no finding

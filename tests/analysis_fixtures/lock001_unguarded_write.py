@@ -1,0 +1,29 @@
+"""Seeded LOCK001 violations: writes to GUARDED_BY fields outside the
+owning lock (and negative cases the entered-held fixpoint must clear)."""
+import threading
+
+GUARDED_BY = {"Account": {"balance": "_lock", "history": "_lock"}}
+
+
+class Account:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.balance = 0               # __init__ is exempt: not shared yet
+        self.history = []
+
+    def deposit(self, n):
+        with self._lock:
+            self.balance += n          # lexically guarded: no finding
+
+    def bad_deposit(self, n):
+        self.balance += n              # EXPECT: LOCK001
+
+    def bad_log(self, entry):
+        self.history.append(entry)     # EXPECT: LOCK001
+
+    def _apply_locked(self, n):
+        self.balance += n              # entered-held (see transfer): clean
+
+    def transfer(self, n):
+        with self._lock:
+            self._apply_locked(n)

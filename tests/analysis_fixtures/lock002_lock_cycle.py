@@ -1,0 +1,22 @@
+"""Seeded LOCK002 violation: ABBA lock-order cycle."""
+import threading
+
+GUARDED_BY = {"Pair": {"a_val": "_lock_a", "b_val": "_lock_b"}}
+
+
+class Pair:
+    def __init__(self):
+        self._lock_a = threading.Lock()
+        self._lock_b = threading.Lock()
+        self.a_val = 0
+        self.b_val = 0
+
+    def ab(self):
+        with self._lock_a:
+            with self._lock_b:         # EXPECT: LOCK002
+                self.b_val += 1
+
+    def ba(self):
+        with self._lock_b:
+            with self._lock_a:         # the reversed nesting closes the cycle
+                self.a_val += 1

@@ -1,0 +1,274 @@
+"""Tests for repro.analysis — the static lint pass (DESIGN.md §12).
+
+Three layers: every rule catches its seeded fixture at the right
+file/line (the analyzer's teeth), the real tree is clean for the gated
+scopes (the analyzer's value), and the baseline/CLI workflow behaves
+(regen, drift, gated-scope refusal, exit codes).  Plus unit tests for
+the TSan-lite runtime lock checker.
+"""
+import json
+import pathlib
+import threading
+
+import pytest
+
+from repro.analysis import check as check_cli
+from repro.analysis import model, rules
+from repro.analysis.lockcheck import (CheckedCondition, CheckedLock,
+                                      LockDisciplineError, LockRegistry)
+from repro.analysis.model import Finding
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = ROOT / "tests" / "analysis_fixtures"
+
+
+def _findings(name):
+    return check_cli.check_paths([FIXTURES / name], ROOT)
+
+
+def _lines(findings, rule_id):
+    return sorted(f.line for f in findings if f.rule_id == rule_id)
+
+
+# ---------------------------------------------------------------------------
+# one fixture per rule ID, asserting file + line
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixture,rule_id,count", [
+    ("jax001_traced_branch.py", "JAX001", 2),
+    ("jax002_host_sync.py", "JAX002", 3),
+    ("jax003_pow2_ladder.py", "JAX003", 3),
+    ("jax004_int32_cumsum.py", "JAX004", 2),
+    ("lock001_unguarded_write.py", "LOCK001", 2),
+    ("lock002_lock_cycle.py", "LOCK002", 1),
+    ("api001_bare_raise.py", "API001", 2),
+    ("api002_shim_import.py", "API002", 2),
+])
+def test_rule_catches_seeded_fixture(fixture, rule_id, count):
+    found = _findings(fixture)
+    expected = [line for rid, line
+                in check_cli._expected_markers(FIXTURES / fixture)
+                if rid == rule_id]
+    assert len(expected) == count, "fixture markers drifted"
+    assert _lines(found, rule_id) == sorted(expected)
+    # and nothing else fires on the fixture (negative cases stay clean)
+    assert {f.rule_id for f in found} == {rule_id}
+    assert all(f.path == f"tests/analysis_fixtures/{fixture}"
+               for f in found)
+
+
+def test_self_check_covers_every_rule():
+    assert check_cli.self_check(ROOT, FIXTURES) == 0
+
+
+def test_repo_rule_flags_tracked_bytecode():
+    from repro.analysis.api_rules import check_tracked_artifacts
+    bad = ["pkg/__pycache__/m.cpython-310.pyc", "old.pyc",
+           "dist/x.egg-info/PKG-INFO"]
+    out = check_tracked_artifacts(["src/ok.py", "README.md"] + bad)
+    assert sorted(f.path for f in out) == sorted(bad)
+    assert all(f.rule_id == "REPO001" for f in out)
+
+
+# ---------------------------------------------------------------------------
+# the real tree: gated scopes are clean, baseline covers the rest
+# ---------------------------------------------------------------------------
+
+def test_real_tree_gated_scopes_have_zero_findings():
+    findings = check_cli.collect_findings(ROOT)
+    gated = [f for f in findings
+             if f.path.startswith(model.STRICT_SCOPES)
+             or f.rule_id == "REPO001"]
+    assert gated == [], [f.render() for f in gated]
+
+
+def test_real_tree_is_clean_modulo_committed_baseline():
+    findings = check_cli.collect_findings(ROOT)
+    baseline = model.load_baseline(ROOT / "tests" / "analysis_baseline.json")
+    new, stale = model.apply_baseline(findings, baseline)
+    assert new == [], [f.render() for f in new]
+    assert stale == [], [f.render() for f in stale]
+
+
+def test_cli_exit_codes(tmp_path):
+    # clean repo with the committed baseline
+    assert check_cli.main(["--root", str(ROOT)]) == 0
+    # each fixture is nonzero through --paths
+    for fx in sorted(FIXTURES.glob("*.py")):
+        assert check_cli.main(
+            ["--root", str(ROOT), "--paths", str(fx)]) == 1, fx.name
+    # unknown rule id is a configuration error
+    assert check_cli.main(["--root", str(ROOT), "--rules", "NOPE999"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# baseline workflow: regen / drift / gated-scope refusal
+# ---------------------------------------------------------------------------
+
+def test_baseline_regen_roundtrip(tmp_path):
+    bl = tmp_path / "baseline.json"
+    assert check_cli.main(["--root", str(ROOT), "--baseline", str(bl),
+                           "--regen"]) == 0
+    # freshly regenerated baseline => clean
+    assert check_cli.main(["--root", str(ROOT), "--baseline", str(bl)]) == 0
+    # drift: drop one entry -> that finding is "new" again -> exit 1
+    data = json.loads(bl.read_text())
+    assert data["findings"], "expected baselined findings in this repo"
+    data["findings"] = data["findings"][1:]
+    bl.write_text(json.dumps(data))
+    assert check_cli.main(["--root", str(ROOT), "--baseline", str(bl)]) == 1
+
+
+def test_baseline_stale_entry_forces_regen(tmp_path):
+    bl = tmp_path / "baseline.json"
+    check_cli.main(["--root", str(ROOT), "--baseline", str(bl), "--regen"])
+    data = json.loads(bl.read_text())
+    data["findings"].append({
+        "rule": "API001", "path": "src/repro/train/checkpoint.py",
+        "line": 9999, "message": "a finding that no longer exists"})
+    bl.write_text(json.dumps(data))
+    # the fixed-but-still-baselined entry must fail the run (deliberate
+    # --regen is the only way to shrink the baseline)
+    assert check_cli.main(["--root", str(ROOT), "--baseline", str(bl)]) == 1
+
+
+def test_baseline_refuses_gated_scope_entries(tmp_path):
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps({"version": 1, "findings": [{
+        "rule": "API001", "path": "src/repro/core/sweep.py",
+        "line": 1, "message": "may not be baselined"}]}))
+    with pytest.raises(model.BaselineError):
+        model.load_baseline(bl)
+    assert check_cli.main(["--root", str(ROOT), "--baseline", str(bl)]) == 2
+    # and save_baseline refuses to create one
+    with pytest.raises(model.BaselineError):
+        model.save_baseline(bl, [Finding(
+            "API001", "src/repro/core/sweep.py", 1, "nope")])
+
+
+def test_baseline_suppression_is_line_number_free():
+    f1 = Finding("API001", "src/x.py", 10, "msg")
+    f2 = Finding("API001", "src/x.py", 99, "msg")
+    new, stale = model.apply_baseline([f2], [f1])
+    assert new == [] and stale == []
+
+
+# ---------------------------------------------------------------------------
+# rule registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_builtin_rules():
+    have = set(rules.all_rules())
+    assert have == {"JAX001", "JAX002", "JAX003", "JAX004",
+                    "LOCK001", "LOCK002", "API001", "API002", "REPO001"}
+
+
+def test_registry_rejects_duplicates_and_bad_rules():
+    from repro.analysis.rules import Rule
+    with pytest.raises(ValueError):
+        rules.register(Rule(rule_id="API001", name="dup",
+                            description="d", check_file=lambda sf: []))
+    with pytest.raises(ValueError):        # must have exactly one checker
+        Rule(rule_id="X999", name="none", description="d")
+
+
+# ---------------------------------------------------------------------------
+# TSan-lite runtime checker
+# ---------------------------------------------------------------------------
+
+def test_checkedlock_out_of_order_acquisition_raises():
+    reg = LockRegistry()
+    a = CheckedLock("a", reg)
+    b = CheckedLock("b", reg)
+    with a:
+        with b:                      # a -> b follows registration order
+            pass
+    with b:
+        with pytest.raises(LockDisciplineError, match="acquisition order"):
+            with a:                  # b -> a violates it
+                pass
+    assert reg.violations
+
+
+def test_checkedlock_assert_held_flags_unguarded_write():
+    reg = LockRegistry()
+    lock = CheckedLock("l", reg)
+    with pytest.raises(LockDisciplineError, match="unguarded write"):
+        lock.assert_held()
+    with lock:
+        lock.assert_held()           # held: no error
+    snap = reg.snapshot()
+    assert snap["acquisitions"]["l"] == 1
+
+
+def test_checkedlock_nonstrict_records_instead_of_raising():
+    reg = LockRegistry(strict=False)
+    lock = CheckedLock("l", reg)
+    lock.assert_held()
+    assert len(reg.violations) == 1
+
+
+def test_checkedlock_counts_contention():
+    reg = LockRegistry()
+    lock = CheckedLock("l", reg)
+    entered = threading.Event()
+    release = threading.Event()
+
+    def holder():
+        with lock:
+            entered.set()
+            release.wait(5.0)
+
+    th = threading.Thread(target=holder)
+    th.start()
+    entered.wait(5.0)
+    got = lock.acquire(blocking=False)    # contended fast-path failure
+    assert not got
+    release.set()
+    th.join()
+    with lock:
+        pass
+    snap = reg.snapshot()
+    assert snap["acquisitions"]["l"] == 2
+    assert snap["contended"]["l"] >= 0    # nonblocking miss is not counted
+
+
+def test_checkedcondition_wait_keeps_held_set_truthful():
+    reg = LockRegistry()
+    lock = CheckedLock("l", reg)
+    cond = CheckedCondition(lock)
+    hits = []
+
+    def waiter():
+        with cond:
+            hits.append(reg.held_by_current_thread())
+            cond.wait(timeout=5.0)
+            hits.append(reg.held_by_current_thread())
+        hits.append(reg.held_by_current_thread())
+
+    th = threading.Thread(target=waiter)
+    th.start()
+    # wake it up (notify needs the lock on the notifier side too)
+    import time
+    time.sleep(0.1)
+    with cond:
+        cond.notify_all()
+    th.join()
+    assert hits == [["l"], ["l"], []]
+
+
+def test_checkedcondition_wait_without_lock_is_a_violation():
+    reg = LockRegistry(strict=False)
+    lock = CheckedLock("l", reg)
+    cond = CheckedCondition(lock)
+    with pytest.raises(RuntimeError):
+        cond.wait(timeout=0.01)          # stdlib raises un-acquired error
+    assert any("without" in v for v in reg.violations)
+
+
+def test_duplicate_lock_names_are_uniquified():
+    reg = LockRegistry()
+    a1 = CheckedLock("session:x", reg)
+    a2 = CheckedLock("session:x", reg)
+    assert a1.name == "session:x" and a2.name == "session:x#2"
+    assert a2.rank > a1.rank

@@ -291,17 +291,17 @@ def test_frontend_records_into_shared_recorder():
 # the tentpole stress test: threaded writers/readers vs replay + oracle
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backpressure", ["block", "shed_oldest"])
-def test_threaded_stress_matches_single_threaded_replay(backpressure):
+def _run_threaded_stress(backpressure, *, debug_locks=False):
     """Barrier-released writers and readers against one session; the
     composed delta stream (live state) must equal a single-threaded
-    journal replay and the stateless ``sweep_rebuild_pairs`` oracle."""
+    journal replay and the stateless ``sweep_rebuild_pairs`` oracle.
+    Returns the closed broker and its session for extra assertions."""
     n_writers, n_readers, per_writer = 4, 2, 120
     broker = Broker(
         admission=AdmissionPolicy(max_queue=48, backpressure=backpressure,
                                   block_timeout=30.0),
         degrade=DegradePolicy(max_queue_depth=24),
-        journal=True, flush_interval=0.002)
+        journal=True, flush_interval=0.002, debug_locks=debug_locks)
     sess = broker.create_session("stress", dims=1, capacity=64)
     _warm(sess, n=16)
     barrier = threading.Barrier(n_writers + n_readers)
@@ -364,3 +364,25 @@ def test_threaded_stress_matches_single_threaded_replay(backpressure):
         assert st["shed"] == 0
     # readers always got a typed answer, exact or flagged-degraded
     assert reads and all(isinstance(r, CountResult) for r in reads)
+    return broker, sess
+
+
+@pytest.mark.parametrize("backpressure", ["block", "shed_oldest"])
+def test_threaded_stress_matches_single_threaded_replay(backpressure):
+    _run_threaded_stress(backpressure)
+
+
+def test_threaded_stress_under_debug_locks():
+    """The same stress run under TSan-lite audited locks: zero lock
+    discipline violations, and the contention counters surface through
+    ``Broker.stats()["locks"]`` (DESIGN.md §12)."""
+    broker, _sess = _run_threaded_stress("block", debug_locks=True)
+    locks = broker.stats()["locks"]
+    assert locks["violations"] == []
+    # broker lock registered first = ranks before the session lock
+    assert locks["order"][0] == "broker"
+    assert "session:stress" in locks["order"]
+    # the audited locks actually saw the traffic (writers + flusher +
+    # readers all acquire the session lock)
+    assert locks["acquisitions"]["session:stress"] > 100
+    assert set(locks["contended"]) == set(locks["acquisitions"])
