@@ -12,7 +12,11 @@ Compares a fresh ``--json`` benchmark dump against the committed baseline
   contention spike away from a spurious failure — or
 * a **derived invariant** (``K=``/``pairs=`` counts — deterministic
   functions of the seeded workloads) changed, which means an engine
-  changed behavior, not speed.
+  changed behavior, not speed, or
+* a row carrying a ``min_required=V`` derived token fell below its
+  absolute floor (the ``churn_small_batch_speedup_*`` rows: the blocked
+  index's win over the flat splice is an acceptance criterion that
+  gates in every run, baseline platform or not).
 
 Rows present on only one side are reported as informational: adding a
 benchmark must not require regenerating history, and retiring one must not
@@ -88,11 +92,38 @@ def _counter_failures(name: str, derived: str) -> int:
     return failures
 
 
+def _floor_failures(name: str, us: float, derived: str) -> int:
+    """Rows may carry an absolute floor: ``min_required=V`` in ``derived``
+    means the row's value must be >= V in EVERY fresh run, baseline or
+    not.  Used by the ``churn_small_batch_speedup_*`` rows — the blocked
+    index's >=5x win over the flat splice is an acceptance criterion,
+    not a trend, so it gates like the zero-counters do rather than
+    against a platform-matched baseline."""
+    failures = 0
+    for token in str(derived).split(";"):
+        key, _, value = token.partition("=")
+        if key != "min_required":
+            continue
+        try:
+            floor = float(value)
+        except ValueError:
+            print(f"FAIL     {name}: unparsable min_required={value!r}")
+            failures += 1
+            continue
+        if us < floor:
+            print(f"FAIL     {name}: {us:.2f} below required floor {floor:g}")
+            failures += 1
+    return failures
+
+
 def compare(current: Dict, baseline: Dict, gate_timings: bool) -> int:
     failures = 0
     for name in sorted(set(current) | set(baseline)):
         if name in current:
-            failures += _counter_failures(name, str(current[name]["derived"]))
+            cur_row = current[name]
+            failures += _counter_failures(name, str(cur_row["derived"]))
+            failures += _floor_failures(name, float(cur_row["us"]),
+                                        str(cur_row["derived"]))
         if name not in baseline:
             print(f"NEW      {name} (no baseline — informational)")
             continue

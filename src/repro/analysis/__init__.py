@@ -20,6 +20,10 @@ This package makes them CI gates:
   ``ValueError``/``RuntimeError`` raises outside ``core/errors.py``, no
   deprecated per-side service shims outside their definition site, no
   tracked bytecode).
+* :mod:`repro.analysis.inc_rules` — the incremental index's splice-free
+  invariant (no full-array ``np.insert``/``np.delete``/whole-stream
+  sorts on stream state outside the stream-backend homes — the blocked
+  index's sublinear cost model, DESIGN.md §13).
 * :mod:`repro.analysis.lockcheck` — the runtime twin of the static lock
   checker: TSan-lite :class:`CheckedLock`/:class:`CheckedCondition` that
   ``Broker(debug_locks=True)`` swaps in.

@@ -1,0 +1,87 @@
+"""Incremental-index hygiene rule (INC001).
+
+PR 10's blocked endpoint index (DESIGN.md §13) makes small-batch flush
+cost sublinear in n — an invariant one careless consumer can silently
+destroy by splicing or re-sorting a whole persistent stream.  The
+splice-free rule is machine-checked the same way JAX003 guards the one
+pow2 ladder:
+
+* ``INC001`` — full-array ``np.insert``/``np.delete``, or a whole-stream
+  ``np.argsort``/``np.sort``/``np.lexsort``, applied to incremental-index
+  stream state (``_values``/``_is_upper``/``_is_sub``/``_owner``/
+  ``_blocks``/``_streams`` attributes) outside the stream-backend homes
+  (``core/flatstream.py``, the blessed flat-splice module, and
+  ``core/blockstream.py``, the blocked surgery itself).  Everything else
+  must go through ``IncrementalIndex.apply_batch`` so the per-batch cost
+  model — O(b·log n + touched_blocks·B) — stays true.
+
+Delta-local sorts (``np.lexsort`` over a batch's own 2·b endpoints,
+``np.argsort`` over rematch candidate blocks) reference no stream-state
+attribute and are not flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.model import Finding, SourceFile
+from repro.analysis.rules import Rule, register
+
+_NUMPY_MODULES = {"np", "numpy", "onp"}
+# full-array splice calls (always a rebuild of the persistent stream)
+_SPLICE_CALLS = {"insert", "delete"}
+# whole-stream re-sorts (the O(n log n) the index exists to avoid)
+_SORT_CALLS = {"argsort", "sort", "lexsort"}
+# attribute names that hold incremental-index stream state
+_STREAM_STATE = {"_values", "_is_upper", "_is_sub", "_owner",
+                 "_blocks", "_streams"}
+# the two stream-backend implementations own their surgery
+_IMPL_HOMES = ("core/flatstream.py", "core/blockstream.py")
+
+
+def _numpy_call_name(node: ast.Call) -> str:
+    func = node.func
+    if isinstance(func, ast.Attribute) and isinstance(func.value, ast.Name) \
+            and func.value.id in _NUMPY_MODULES:
+        return func.attr
+    return ""
+
+
+def _touches_stream_state(node: ast.Call) -> bool:
+    for part in [*node.args, *(kw.value for kw in node.keywords)]:
+        for n in ast.walk(part):
+            if isinstance(n, ast.Attribute) and n.attr in _STREAM_STATE:
+                return True
+    return False
+
+
+def _check_stream_splice(sf: SourceFile) -> List[Finding]:
+    if sf.path.endswith(_IMPL_HOMES):
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _numpy_call_name(node)
+        if name in _SPLICE_CALLS and _touches_stream_state(node):
+            out.append(Finding(
+                "INC001", sf.path, node.lineno,
+                f"full-array `np.{name}` on incremental-index stream state "
+                "outside the stream backends — go through "
+                "IncrementalIndex.apply_batch (blocked surgery is "
+                "O(b·log n + touched·B); a whole-stream splice is O(n))"))
+        elif name in _SORT_CALLS and _touches_stream_state(node):
+            out.append(Finding(
+                "INC001", sf.path, node.lineno,
+                f"whole-stream `np.{name}` over incremental-index state "
+                "outside the stream backends — the persistent streams are "
+                "already sorted; sort only the batch's delta endpoints"))
+    return out
+
+
+register(Rule(
+    rule_id="INC001", name="stream-splice-free",
+    description="full-array np.insert/np.delete or whole-stream sorts on "
+                "IncrementalIndex stream state outside the stream-backend "
+                "homes",
+    check_file=_check_stream_splice))

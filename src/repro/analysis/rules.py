@@ -84,7 +84,8 @@ def _ensure_builtin() -> None:
         return
     _BUILTIN_DONE = True
     # importing the rule modules registers their rules (self-population)
-    from repro.analysis import api_rules, jax_rules, lock_rules  # noqa: F401
+    from repro.analysis import (api_rules, inc_rules,  # noqa: F401
+                                jax_rules, lock_rules)
 
 
 def all_rules() -> Dict[str, Rule]:

@@ -10,7 +10,11 @@ queries (the per-dimension passes are independent — arXiv:1309.3458) and
 pays per batch of ``b`` changed regions only
 
 * O(d·b·log b) to sort the 2·b delta endpoints per dimension,
-* O(d·(n+m)) single vectorized passes to splice them into the index, and
+* O(d·(b·log n + touched_blocks·B)) blocked splice passes to merge them
+  into the two-level endpoint index (:mod:`repro.core.blockstream`,
+  DESIGN.md §13; the legacy O(d·(n+m)) flat splice survives as
+  ``index_impl="flat"`` — :mod:`repro.core.flatstream` — the
+  conformance twin and benchmark reference), and
 * ONE stacked vectorized rematch over all changed extents (output
   O(K_changed)) to re-derive exactly the pairs the batch gained and lost,
 
@@ -50,12 +54,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Iterable, List, NamedTuple, Optional, Set, Tuple
+from typing import Dict, Iterable, List, NamedTuple, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.core import runtime as runtime_lib
+from repro.core.blockstream import BlockedEndpointStream
 from repro.core.errors import ValidationError
+from repro.core.flatstream import FlatEndpointStream, _Prep
 
 SUB = "sub"
 UPD = "upd"
@@ -158,6 +164,44 @@ def _make_fused_mask():
     return mask
 
 
+_fused_delta = None      # lazily-built fused before/after delta kernel
+_DELTA_CHUNK = 512       # columns folded into one device-side any() flag
+
+
+def _make_fused_delta():
+    import jax
+
+    @jax.jit
+    def delta_flags(old_lo, old_hi, new_lo, new_hi, c_lo, c_hi):
+        """(b, m/CH) chunk flags: does any cell of the chunk flip?
+
+        A churn delta lattice is ~b·α nonzeros out of b·m cells, so
+        emitting the lattice itself makes the host scan — not the
+        arithmetic — the bottleneck (measured ~5 ms for b·m = 1.6e7
+        against a 4 ms kernel).  Returning only per-chunk any() flags
+        keeps the device pass compute-bound and shrinks host traffic by
+        CH×; the caller recomputes the few hit chunks in numpy.
+        """
+        if old_lo.shape[0] == 1:
+            # d = 1 stays 2-D: the (d, b, m) broadcast + all(axis=0)
+            # reduction below costs ~2x in lattice temporaries on the
+            # CPU backend (measured), and d = 1 is the churn hot path
+            was = ((c_lo[0][None, :] <= old_hi[0][:, None]) &
+                   (old_lo[0][:, None] <= c_hi[0][None, :]))
+            now = ((c_lo[0][None, :] <= new_hi[0][:, None]) &
+                   (new_lo[0][:, None] <= c_hi[0][None, :]))
+        else:
+            was = ((c_lo[:, None, :] <= old_hi[:, :, None]) &
+                   (old_lo[:, :, None] <= c_hi[:, None, :])).all(axis=0)
+            now = ((c_lo[:, None, :] <= new_hi[:, :, None]) &
+                   (new_lo[:, :, None] <= c_hi[:, None, :])).all(axis=0)
+        x = was ^ now
+        ch = min(_DELTA_CHUNK, x.shape[1])    # both pow2: ch divides m
+        return x.reshape(x.shape[0], -1, ch).any(axis=-1)
+
+    return delta_flags
+
+
 # one pow2-bucketing rule and one padding helper for the whole repo —
 # runtime is import-light (no jax at module scope), so this host-numpy
 # module keeps its no-jax-at-import property
@@ -232,7 +276,11 @@ def _bulk_overlap_pairs(q_lo, q_hi, c_lo, c_hi,
         for d in range(1, q_lo.shape[0]):
             mask &= ((c_lo[d][None, :] <= q_hi[d][:, None]) &
                      (q_lo[d][:, None] <= c_hi[d][None, :]))
-        qi, cj = np.nonzero(mask)
+        # flatnonzero on the raveled view + divmod is ~30x cheaper than
+        # np.nonzero on the 2-D mask (nonzero's per-axis unravel dominates
+        # at small b — the b=1 single-move hot path).
+        flat = np.flatnonzero(mask)
+        qi, cj = np.divmod(flat, m)
         return qi, cj, regime
     if regime == "jax":
         global _fused_mask
@@ -242,7 +290,8 @@ def _bulk_overlap_pairs(q_lo, q_hi, c_lo, c_hi,
         mask = np.asarray(_fused_mask(
             _pad_cols(q_lo, bp, np.inf), _pad_cols(q_hi, bp, -np.inf),
             _pad_cols(c_lo, mp, np.inf), _pad_cols(c_hi, mp, -np.inf)))
-        qi, cj = np.nonzero(mask)
+        flat = np.flatnonzero(mask)
+        qi, cj = np.divmod(flat, mp)
         # The [+inf, -inf] sentinels are inert against finite extents but a
         # legitimate (-inf, +inf) match-everything region hits them (its
         # closed-interval test is vacuously true against ANY bounds), so
@@ -253,24 +302,8 @@ def _bulk_overlap_pairs(q_lo, q_hi, c_lo, c_hi,
     return qi, cj, regime
 
 
-@dataclasses.dataclass
-class _Prep:
-    """Position-space rank tables of one frozen index state.
-
-    The same quantities as :func:`repro.core.sweep.rank_tables_from_cumsums`
-    (a/b per-extent rank ranges + rank→id maps), built from the persistent
-    sorted stream with two numpy cumsums — O(n+m) per batch, cached until
-    the next mutation.
-    """
-
-    subs_by_lo: np.ndarray   # sub-lower rank → sub rid
-    upds_by_lo: np.ndarray   # upd-lower rank → upd rid
-    a_start: np.ndarray      # per sub rid: first upd-lower rank after its lo
-    a_end: np.ndarray        # per sub rid: first upd-lower rank after its hi
-    b_start: np.ndarray      # per upd rid: symmetric over sub-lower ranks
-    b_end: np.ndarray
-    live_s: np.ndarray       # live rid arrays (emission sources)
-    live_u: np.ndarray
+# _Prep now lives in repro.core.flatstream (shared by both stream
+# backends); imported above and re-exported here for the historical path.
 
 
 class IncrementalIndex:
@@ -293,17 +326,29 @@ class IncrementalIndex:
                  delta_impl: str = "vector",
                  regime_policy: Optional[
                      runtime_lib.BulkRegimePolicy] = None,
-                 recorder: Optional[runtime_lib.StatsRecorder] = None):
+                 recorder: Optional[runtime_lib.StatsRecorder] = None,
+                 index_impl: str = "blocked",
+                 block_target: Optional[int] = None):
         if dims < 1:
             raise ValidationError(f"dims must be >= 1, got {dims}")
         if delta_impl not in ("vector", "loop"):
             raise ValidationError(f"delta_impl must be 'vector' or 'loop', "
                              f"got {delta_impl!r}")
+        if index_impl not in ("blocked", "flat"):
+            raise ValidationError(f"index_impl must be 'blocked' or 'flat', "
+                             f"got {index_impl!r}")
         self.dims = dims
         # "vector": one stacked rematch per batch (_matches_of_many);
         # "loop": the pre-vectorization per-region path, kept as the
         # benchmark reference and property-test cross-check
         self.delta_impl = delta_impl
+        # "blocked": two-level √n-block endpoint index, O(b·log n +
+        # touched·B) surgery (DESIGN.md §13); "flat": the legacy
+        # whole-stream O(n+m) splice, kept as the conformance twin.
+        # block_target pins the block size B (tests force split/merge
+        # churn with tiny B); None adapts B to ~√n.
+        self.index_impl = index_impl
+        self.block_target = block_target
         # planner-owned bulk-rematch thresholds (force/audit via stats)
         self.regime_policy = regime_policy or runtime_lib.DEFAULT_BULK_POLICY
         self.recorder = recorder if recorder is not None \
@@ -314,19 +359,54 @@ class IncrementalIndex:
         self._live = {s: np.zeros(cap, bool) for s in _SIDES}
         # the persistent sorted streams, one per dimension (values
         # ascending, lowers before uppers at equal values — the
-        # closed-interval tie-break)
-        self._values = [np.zeros(0, np.float32) for _ in range(dims)]
-        self._is_upper = [np.zeros(0, bool) for _ in range(dims)]
-        self._is_sub = [np.zeros(0, bool) for _ in range(dims)]
-        self._owner = [np.zeros(0, np.int32) for _ in range(dims)]
+        # closed-interval tie-break), behind the backend chosen above
+        self._streams = [self._make_stream() for _ in range(dims)]
         self._prep: List[Optional[_Prep]] = [None] * dims
+        self._cand_counts: List[Optional[int]] = [None] * dims
+        # packed live-extent cache per side: (lv_ids, rid→column map,
+        # lo (d,m), hi (d,m)) gathered once and then patched in place on
+        # moves — the delta rematch reads counterpart extents without an
+        # O(m) fancy-index gather per flush.  Invalidated only when a
+        # side's *liveness* changes (adds/removes); moves scatter b
+        # columns (matching the blocked stream's O(b) surgery scaling).
+        self._pack: Dict[str, Optional[Tuple[np.ndarray, np.ndarray,
+                                             np.ndarray, np.ndarray]]] = \
+            {s: None for s in _SIDES}
+        # last batch's surgery stats (splice time + blocks touched) —
+        # the broker frontend folds these into its flush record
+        self.last_batch_stats: Optional[runtime_lib.MatchStats] = None
+
+    def _make_stream(self):
+        if self.index_impl == "flat":
+            return FlatEndpointStream()
+        return BlockedEndpointStream(block_target=self.block_target)
 
     # -- introspection -----------------------------------------------------
     def n_live(self, side: str) -> int:
         return int(self._live[side].sum())
 
     def live_ids(self, side: str) -> np.ndarray:
+        pk = self._pack[side]
+        if pk is not None:
+            return pk[0]
         return np.nonzero(self._live[side])[0]
+
+    def _live_pack(self, side: str) -> Tuple[np.ndarray, np.ndarray,
+                                             np.ndarray, np.ndarray]:
+        """``(lv_ids, pos, lo (d,m), hi (d,m))`` — the packed live view.
+
+        ``pos`` maps rid → column in the packed blocks (-1 for dead
+        rids).  Built lazily with one gather per store, then kept fresh
+        in place by :meth:`_apply_grouped` for moves-only batches.
+        """
+        pk = self._pack[side]
+        if pk is None:
+            lv = np.nonzero(self._live[side])[0]
+            pos = np.full(self._live[side].shape[0], -1, np.int64)
+            pos[lv] = np.arange(lv.size)
+            pk = (lv, pos, self._lo[side][:, lv], self._hi[side][:, lv])
+            self._pack[side] = pk
+        return pk
 
     def extent_of(self, side: str, rid: int) -> Tuple[np.ndarray, np.ndarray]:
         if not self._live[side][rid]:
@@ -334,9 +414,12 @@ class IncrementalIndex:
         return self._lo[side][:, rid].copy(), self._hi[side][:, rid].copy()
 
     def stream(self, dim: int = 0):
-        """(values, is_upper, is_sub, owner) views of one sorted stream."""
-        return (self._values[dim], self._is_upper[dim],
-                self._is_sub[dim], self._owner[dim])
+        """(values, is_upper, is_sub, owner) views of one sorted stream.
+
+        The blocked backend materializes (and caches) the flat view on
+        demand — consumers see the same contract under either impl.
+        """
+        return self._streams[dim].arrays()
 
     # -- capacity ----------------------------------------------------------
     def _ensure_capacity(self, side: str, rid: int) -> None:
@@ -497,22 +580,44 @@ class IncrementalIndex:
                                   removes.get(side, empty)])
             for side in _SIDES}
 
-        # pairs the changed regions participate in *before* the batch
+        # a one-sided moves-only batch keeps the counterpart view frozen
+        # across the splice, so the delta can come from ONE fused
+        # before/after pass (_delta_matches_moved) instead of two full
+        # match-set scans; the per-region loop impl stays two-phase as
+        # the cross-checked reference
+        moved_sides = [s for s in _SIDES
+                       if moves.get(s) is not None and moves[s][0].size]
+        fused_side = None
+        if (want_delta and self.delta_impl != "loop"
+                and len(moved_sides) == 1
+                and not any(r.size for r in removes.values())
+                and not any(g is not None and g[0].size
+                            for g in adds.values())):
+            fused_side = moved_sides[0]
+            fused_old_lo = self._lo[fused_side][:, moves[fused_side][0]].copy()
+            fused_old_hi = self._hi[fused_side][:, moves[fused_side][0]].copy()
+
+        # pairs the changed regions participate in *before* the batch —
+        # the packed live-extent cache serves the counterpart reads, so a
+        # one-sided batch never gathers (or even scans) its own side
         old_pairs: Set[Tuple[int, int]] = set()
-        if want_delta:
-            lv = {s: self.live_ids(s) for s in _SIDES}   # once per phase
+        if want_delta and fused_side is None:
             for side in _SIDES:
                 if changed_old[side].size:
                     old_pairs |= self._changed_matches(
-                        side, changed_old[side], lv)
+                        side, changed_old[side])
 
         # splice the delta into the persistent stream + dense stores
-        self._delete_records_grouped(changed_old)
+        t0 = time.perf_counter()
+        touched = self._delete_records_grouped(changed_old)
         for side, rids in removes.items():
             self._live[side][rids] = False
             self._lo[side][:, rids] = np.inf
             self._hi[side][:, rids] = -np.inf
+            if rids.size:
+                self._pack[side] = None       # liveness changed
         inserts = {}
+        n_changed = 0
         for side in _SIDES:
             parts = [g for g in (moves.get(side), adds.get(side))
                      if g is not None and g[0].size]
@@ -526,51 +631,92 @@ class IncrementalIndex:
             self._hi[side][:, rids] = hi
             self._live[side][rids] = True
             inserts[side] = (rids, lo, hi)
-        self._insert_records_grouped(inserts)
+            if adds.get(side) is not None and adds[side][0].size:
+                self._pack[side] = None       # liveness changed
+            elif self._pack[side] is not None:
+                # moves only: patch the b changed columns in place —
+                # the packed view stays warm across move-heavy churn
+                cols = self._pack[side][1][rids]
+                self._pack[side][2][:, cols] = lo
+                self._pack[side][3][:, cols] = hi
+            n_changed += int(rids.size)
+        touched += self._insert_records_grouped(inserts)
         self._prep = [None] * self.dims
+        self._cand_counts = [None] * self.dims
+        splice_stats = runtime_lib.MatchStats(
+            engine="incremental_splice", regime=self.index_impl,
+            count=n_changed + sum(int(r.size) for r in removes.values()),
+            blocks_touched=touched)
+        splice_stats.add_phase("splice", time.perf_counter() - t0)
+        self.last_batch_stats = splice_stats
+        self.recorder.record(splice_stats)
 
-        # pairs the changed regions participate in *after* the batch
+        if fused_side is not None:
+            rids, lo, hi = moves[fused_side]
+            added, removed = self._delta_matches_moved(
+                fused_side, np.asarray(rids, np.int64),
+                fused_old_lo, fused_old_hi, lo, hi)
+            return BatchDelta(added=added, removed=removed)
+
+        # pairs the changed regions participate in *after* the batch; a
+        # moves-only counterpart side kept its packed view (patched in
+        # place above), so no side is re-scanned between the two phases
         new_pairs: Set[Tuple[int, int]] = set()
         if want_delta:
-            lv = {s: self.live_ids(s) for s in _SIDES}
             for side, (rids, _, _) in inserts.items():
-                new_pairs |= self._changed_matches(side, rids, lv)
+                new_pairs |= self._changed_matches(side, rids)
         return BatchDelta(added=new_pairs - old_pairs,
                           removed=old_pairs - new_pairs)
 
-    def _changed_matches(self, side: str, rids: np.ndarray,
-                         lv_cache: dict) -> Set[Tuple[int, int]]:
+    def _changed_matches(self, side: str,
+                         rids: np.ndarray) -> Set[Tuple[int, int]]:
         """Match sets of changed rids vs live counterparts, impl-dispatched."""
         if self.delta_impl == "loop":
+            t0 = time.perf_counter()
             out: Set[Tuple[int, int]] = set()
             for rid in rids.tolist():
-                out |= self._matches_of(side, rid, lv_cache)
+                out |= self._matches_of(side, rid)
+            # same observability contract as the stacked paths: every
+            # rematch phase is a MatchStats, whichever impl ran it
+            stats = runtime_lib.MatchStats(
+                engine="incremental_bulk", regime="loop",
+                count=len(out), capacity=len(out), attempts=[len(out)])
+            stats.add_phase("rematch", time.perf_counter() - t0)
+            self.recorder.record(stats)
             return out
-        return self._matches_of_many(side, rids, lv_cache)
+        return self._matches_of_many(side, rids)
 
     # -- stream surgery ----------------------------------------------------
-    def _delete_records_grouped(self, by_side) -> None:
+    def _delete_records_grouped(self, by_side) -> int:
+        """Drop the changed rids' endpoint records; returns blocks touched.
+
+        Must run *before* the dense stores are wiped — the stores still
+        hold the old bounds, which the blocked backend routes through its
+        directory to probe only owning blocks.
+        """
         if not any(r.size for r in by_side.values()):
-            return
+            return 0
         # one common size — the owner column is gathered through both masks
         size = max(self._live[s].shape[0] for s in _SIDES)
         drop = {s: np.zeros(size, bool) for s in _SIDES}
+        del_lo, del_hi = [], []
         for side, rids in by_side.items():
             if rids.size:
                 drop[side][rids] = True
+                del_lo.append(self._lo[side][:, rids])
+                del_hi.append(self._hi[side][:, rids])
+        vals = np.concatenate(del_lo + del_hi, axis=1)   # (d, 2b) old bounds
+        touched = 0
         for d in range(self.dims):
-            gone = np.where(self._is_sub[d], drop[SUB][self._owner[d]],
-                            drop[UPD][self._owner[d]])
-            keep = ~gone
-            self._values[d] = self._values[d][keep]
-            self._is_upper[d] = self._is_upper[d][keep]
-            self._is_sub[d] = self._is_sub[d][keep]
-            self._owner[d] = self._owner[d][keep]
+            touched += self._streams[d].delete_batch(
+                drop[SUB], drop[UPD], vals[d])
+        return touched
 
-    def _insert_records_grouped(self, inserts) -> None:
-        """Splice side-grouped ``(rids, lo, hi)`` blocks — no per-entry loop."""
+    def _insert_records_grouped(self, inserts) -> int:
+        """Splice side-grouped ``(rids, lo, hi)`` blocks — no per-entry
+        loop.  Returns blocks touched across dimensions."""
         if not inserts:
-            return
+            return 0
         rids = np.concatenate([g[0] for g in inserts.values()])
         lo = np.concatenate([g[1] for g in inserts.values()], axis=1)
         hi = np.concatenate([g[2] for g in inserts.values()], axis=1)
@@ -579,65 +725,44 @@ class IncrementalIndex:
             for side, g in inserts.items()])
         b = rids.shape[0]
         if b == 0:
-            return
+            return 0
         up0 = np.zeros(2 * b, bool)
         up0[b:] = True
         sub0 = np.concatenate([is_sub, is_sub])
         own0 = np.concatenate([rids, rids]).astype(np.int32)
+        touched = 0
         for d in range(self.dims):
             vals = np.concatenate([lo[d], hi[d]]).astype(np.float32)
             order = np.lexsort((up0, vals))            # O(b·log b) — delta only
-            vals, up, sub, own = vals[order], up0[order], sub0[order], own0[order]
-            # Splice position per delta record: a *lower* goes before every
-            # stream record of equal value (side='left'), an *upper* after
-            # all of them (side='right') — preserving the lowers-before-
-            # uppers closed-interval tie-break without composite keys.
-            pos = np.where(up,
-                           np.searchsorted(self._values[d], vals, side="right"),
-                           np.searchsorted(self._values[d], vals, side="left"))
-            dest = pos + np.arange(2 * b)    # pos is nondecreasing in order
-            total = self._values[d].shape[0] + 2 * b
-            old = np.ones(total, bool)
-            old[dest] = False
-            for name, delta in (("_values", vals), ("_is_upper", up),
-                                ("_is_sub", sub), ("_owner", own)):
-                store = getattr(self, name)
-                merged = np.empty(total, delta.dtype)
-                merged[dest] = delta
-                merged[old] = store[d]
-                store[d] = merged
+            # (value, upper) presorted delta: the backend's splice keeps
+            # the lowers-before-uppers tie-break (lower merges side='left',
+            # upper side='right' against equal stream values)
+            touched += self._streams[d].insert_batch(
+                vals[order], up0[order], sub0[order], own0[order])
+        return touched
 
     # -- rank tables + per-region match sets -------------------------------
     def _prep_tables(self, dim: int = 0) -> _Prep:
         if self._prep[dim] is not None:
             return self._prep[dim]
-        is_upper = self._is_upper[dim]
-        is_sub = self._is_sub[dim]
-        owner = self._owner[dim]
-        sel_lo = ~is_upper
-        sel_s_lo = is_sub & sel_lo
-        sel_u_lo = ~is_sub & sel_lo
-        c_sub_lo = np.cumsum(sel_s_lo)       # host int64 — no wrap to fix
-        c_upd_lo = np.cumsum(sel_u_lo)
+        t0 = time.perf_counter()
         cap_s = self._live[SUB].shape[0]
         cap_u = self._live[UPD].shape[0]
-        a_start = np.zeros(cap_s, np.int64)
-        a_end = np.zeros(cap_s, np.int64)
-        b_start = np.zeros(cap_u, np.int64)
-        b_end = np.zeros(cap_u, np.int64)
-        sel_s_up = is_sub & is_upper
-        sel_u_up = ~is_sub & is_upper
-        # inclusive cumsum at a foreign-type position counts strictly-before
-        # lowers — exactly rank_tables_from_cumsums' scatter, done once per
-        # batch on the host stream instead of per jit call on device
-        a_start[owner[sel_s_lo]] = c_upd_lo[sel_s_lo]
-        a_end[owner[sel_s_up]] = c_upd_lo[sel_s_up]
-        b_start[owner[sel_u_lo]] = c_sub_lo[sel_u_lo]
-        b_end[owner[sel_u_up]] = c_sub_lo[sel_u_up]
+        # the stream backend owns table construction: one whole-stream
+        # cumsum pass (flat) or per-block cached locals + prefix-offset
+        # assembly, recomputing only dirty blocks (blocked, DESIGN.md §13)
+        rt = self._streams[dim].rank_tables(cap_s, cap_u)
         self._prep[dim] = _Prep(
-            subs_by_lo=owner[sel_s_lo], upds_by_lo=owner[sel_u_lo],
-            a_start=a_start, a_end=a_end, b_start=b_start, b_end=b_end,
+            subs_by_lo=rt.subs_by_lo, upds_by_lo=rt.upds_by_lo,
+            a_start=rt.a_start, a_end=rt.a_end,
+            b_start=rt.b_start, b_end=rt.b_end,
             live_s=self.live_ids(SUB), live_u=self.live_ids(UPD))
+        stats = runtime_lib.MatchStats(
+            engine="incremental_prep", regime=self.index_impl,
+            count=int(rt.subs_by_lo.size + rt.upds_by_lo.size),
+            blocks_touched=rt.patched_blocks)
+        stats.add_phase("rank_patch", time.perf_counter() - t0)
+        self.recorder.record(stats)
         return self._prep[dim]
 
     def _candidate_count(self, prep: _Prep) -> int:
@@ -652,13 +777,19 @@ class IncrementalIndex:
             + (prep.b_end[prep.live_u] - prep.b_start[prep.live_u]).sum())
 
     def select_dimension(self) -> int:
-        """The most selective candidate-generator dimension (DESIGN.md §8)."""
-        counts = [self._candidate_count(self._prep_tables(d))
-                  for d in range(self.dims)]
-        return min(range(self.dims), key=lambda d: counts[d])
+        """The most selective candidate-generator dimension (DESIGN.md §8).
 
-    def _matches_of(self, side: str, rid: int,
-                    lv_cache: Optional[dict] = None) -> Set[Tuple[int, int]]:
+        Per-dim candidate counts are cached alongside the prep tables and
+        invalidated per batch — back-to-back queries between flushes pay
+        the selectivity probe once.
+        """
+        for d in range(self.dims):
+            if self._cand_counts[d] is None:
+                self._cand_counts[d] = self._candidate_count(
+                    self._prep_tables(d))
+        return min(range(self.dims), key=lambda d: self._cand_counts[d])
+
+    def _matches_of(self, side: str, rid: int) -> Set[Tuple[int, int]]:
         """One region's match set — the rank-table query degenerated.
 
         For a *single* extent the rank-table emission restricted to it is
@@ -672,45 +803,44 @@ class IncrementalIndex:
         constant and — unlike the O(n+m) table rebuild — independent of
         this side's size.  The full table form lives on in
         :meth:`all_pairs`, where the position-space partition is what
-        makes whole-world emission O(K).  ``lv_cache`` lets apply_batch
-        hoist the per-side live-id scans to once per phase."""
+        makes whole-world emission O(K).  Counterpart extents come from
+        the packed live view (:meth:`_live_pack`) — no per-query
+        gather."""
         other = UPD if side == SUB else SUB
-        lv = lv_cache[other] if lv_cache is not None else self.live_ids(other)
+        lv, _, p_lo, p_hi = self._live_pack(other)
         if lv.size == 0:
             return set()
         q_lo, q_hi = self._lo[side][:, rid], self._hi[side][:, rid]
         hit = np.ones(lv.size, bool)
         for d in range(self.dims):
-            hit &= (self._lo[other][d, lv] <= q_hi[d]) & \
-                   (self._hi[other][d, lv] >= q_lo[d])
+            hit &= (p_lo[d] <= q_hi[d]) & (p_hi[d] >= q_lo[d])
         cand = lv[hit]
         if side == SUB:
             return {(rid, int(j)) for j in cand}
         return {(int(i), rid) for i in cand}
 
-    def _matches_of_many(self, side: str, rids: np.ndarray,
-                         lv_cache: Optional[dict] = None
-                         ) -> Set[Tuple[int, int]]:
+    def _matches_of_many(self, side: str,
+                         rids: np.ndarray) -> Set[Tuple[int, int]]:
         """The stacked form of :meth:`_matches_of`: match sets of b changed
         regions in ONE vectorized pass instead of b O(m) passes.
 
-        Gathers the changed extents into a ``(d, b)`` block and the live
-        counterparts into a ``(d, m)`` block (one fancy-index gather per
-        batch, not per region — the dominant cost of the loop path), then
-        delegates to :func:`_bulk_overlap_pairs`, which picks dense-mask /
-        fused-jit / sort-based by b·m.  Output is the union of the b
-        per-region match sets, as ``(sub_rid, upd_rid)`` pairs.
+        Gathers the changed extents into a ``(d, b)`` block and reads the
+        live counterparts off the packed ``(d, m)`` view — under
+        move-only churn that view is patched in place, so a flush pays
+        NO O(m) gather at all — then delegates to
+        :func:`_bulk_overlap_pairs`, which picks dense-mask / fused-jit /
+        sort-based by b·m.  Output is the union of the b per-region
+        match sets, as ``(sub_rid, upd_rid)`` pairs.
         """
         other = UPD if side == SUB else SUB
-        lv = lv_cache[other] if lv_cache is not None else self.live_ids(other)
+        lv, _, p_lo, p_hi = self._live_pack(other)
         rids = np.asarray(rids, np.int64)
         if lv.size == 0 or rids.size == 0:
             return set()
         t0 = time.perf_counter()
         qi, cj, regime = _bulk_overlap_pairs(
             self._lo[side][:, rids], self._hi[side][:, rids],
-            self._lo[other][:, lv], self._hi[other][:, lv],
-            self.regime_policy)
+            p_lo, p_hi, self.regime_policy)
         stats = runtime_lib.MatchStats(
             engine="incremental_bulk", regime=regime, count=int(qi.size),
             capacity=int(qi.size), attempts=[int(qi.size)])
@@ -720,6 +850,113 @@ class IncrementalIndex:
         if side == SUB:
             return set(zip(qs.tolist(), cs.tolist()))
         return set(zip(cs.tolist(), qs.tolist()))
+
+    def _delta_matches_moved(self, side: str, rids: np.ndarray,
+                             old_lo: np.ndarray, old_hi: np.ndarray,
+                             new_lo: np.ndarray, new_hi: np.ndarray
+                             ) -> Tuple[Set[Tuple[int, int]],
+                                        Set[Tuple[int, int]]]:
+        """(added, removed) pair sets of a one-sided moves-only batch.
+
+        The two-phase delta (full before-set, full after-set, set
+        difference) scans the b×m lattice twice and materializes every
+        unchanged pair just to cancel it.  When a batch only *moves*
+        regions on one side, the counterpart view is identical before and
+        after the splice, so the changed pairs can be read off one fused
+        pass: overlap(old) xor overlap(new), with membership in the new
+        mask telling added from removed.  Regimes mirror
+        :func:`_bulk_overlap_pairs` — boolean masks (dense), one jitted
+        kernel emitting per-chunk flip flags so the host recomputes only
+        chunks that changed (jax), or two output-sensitive candidate
+        joins (sort, where the lattice is never materialized anyway).
+        """
+        other = UPD if side == SUB else SUB
+        lv, _, p_lo, p_hi = self._live_pack(other)
+        b, m = int(rids.size), int(lv.size)
+        if b == 0 or m == 0:
+            return set(), set()
+        t0 = time.perf_counter()
+        regime = runtime_lib.select_bulk_regime(b, m, self.regime_policy)
+        if regime == "sort":
+            qi_o, cj_o = _sorted_overlap_pairs(old_lo, old_hi, p_lo, p_hi)
+            qi_n, cj_n = _sorted_overlap_pairs(new_lo, new_hi, p_lo, p_hi)
+            was = set(zip(qi_o.tolist(), cj_o.tolist()))
+            now = set(zip(qi_n.tolist(), cj_n.tolist()))
+            add_pairs = now - was
+            rem_pairs = was - now
+            qi_a = np.fromiter((p[0] for p in add_pairs), np.int64,
+                               len(add_pairs))
+            cj_a = np.fromiter((p[1] for p in add_pairs), np.int64,
+                               len(add_pairs))
+            qi_r = np.fromiter((p[0] for p in rem_pairs), np.int64,
+                               len(rem_pairs))
+            cj_r = np.fromiter((p[1] for p in rem_pairs), np.int64,
+                               len(rem_pairs))
+        elif regime == "dense":
+            was = ((p_lo[0][None, :] <= old_hi[0][:, None]) &
+                   (old_lo[0][:, None] <= p_hi[0][None, :]))
+            now = ((p_lo[0][None, :] <= new_hi[0][:, None]) &
+                   (new_lo[0][:, None] <= p_hi[0][None, :]))
+            for d in range(1, self.dims):
+                was &= ((p_lo[d][None, :] <= old_hi[d][:, None]) &
+                        (old_lo[d][:, None] <= p_hi[d][None, :]))
+                now &= ((p_lo[d][None, :] <= new_hi[d][:, None]) &
+                        (new_lo[d][:, None] <= p_hi[d][None, :]))
+            flat = np.flatnonzero(was ^ now)
+            grew = now.ravel()[flat]          # True → added, False → removed
+            qi, cj = np.divmod(flat, m)
+            qi_a, cj_a = qi[grew], cj[grew]
+            qi_r, cj_r = qi[~grew], cj[~grew]
+        else:
+            global _fused_delta
+            if _fused_delta is None:
+                _fused_delta = _make_fused_delta()
+            bp, mp = _round_up_pow2(b), _round_up_pow2(m)
+            cl_pad = _pad_cols(p_lo, mp, np.inf)
+            ch_pad = _pad_cols(p_hi, mp, -np.inf)
+            flags = np.asarray(_fused_delta(
+                _pad_cols(old_lo, bp, np.inf), _pad_cols(old_hi, bp, -np.inf),
+                _pad_cols(new_lo, bp, np.inf), _pad_cols(new_hi, bp, -np.inf),
+                cl_pad, ch_pad))
+            ck = mp // flags.shape[1]
+            ri, ki = np.nonzero(flags)
+            # recompute only the flipped chunks on the host: each flag
+            # covers (moved region ri, counterpart columns [ki*ck, +ck)),
+            # so the numpy re-evaluation touches ~hits·CH cells, not b·m
+            col0 = ki * ck
+            gidx = col0[:, None] + np.arange(ck)
+            was = np.ones((ri.size, ck), bool)
+            now = np.ones((ri.size, ck), bool)
+            for d in range(self.dims):
+                cl, chh = cl_pad[d][gidx], ch_pad[d][gidx]
+                was &= ((cl <= old_hi[d][ri][:, None]) &
+                        (old_lo[d][ri][:, None] <= chh))
+                now &= ((cl <= new_hi[d][ri][:, None]) &
+                        (new_lo[d][ri][:, None] <= chh))
+            rr, cc = np.nonzero(was ^ now)
+            qi, cj = ri[rr], col0[rr] + cc
+            grew = now[rr, cc]
+            # same sentinel caveat as the fused mask: filter padded
+            # row/column indices explicitly rather than reasoning about
+            # which inf-bound combinations can flip
+            keep = (qi < b) & (cj < m)
+            qi, cj, grew = qi[keep], cj[keep], grew[keep]
+            qi_a, cj_a = qi[grew], cj[grew]
+            qi_r, cj_r = qi[~grew], cj[~grew]
+        stats = runtime_lib.MatchStats(
+            engine="incremental_bulk", regime=regime,
+            count=int(qi_a.size + qi_r.size),
+            capacity=int(qi_a.size + qi_r.size),
+            attempts=[int(qi_a.size + qi_r.size)])
+        stats.add_phase("rematch", time.perf_counter() - t0)
+        self.recorder.record(stats)
+
+        def orient(qs, cs):
+            if side == SUB:
+                return set(zip(qs.tolist(), cs.tolist()))
+            return set(zip(cs.tolist(), qs.tolist()))
+
+        return (orient(rids[qi_a], lv[cj_a]), orient(rids[qi_r], lv[cj_r]))
 
     # -- full enumeration from the index (no re-sort) ----------------------
     def all_pairs(self) -> Set[Tuple[int, int]]:

@@ -207,7 +207,10 @@ class MatchStats:
     ddim generator choice, …).  ``attempts`` lists every capacity tried —
     ``len(attempts) - 1 == retries``.  ``phase_seconds`` keys follow the
     module-level vocabulary (``probe``/``emit``/``collect``; host-side
-    engines use their own phase names, e.g. ``rematch``).
+    engines use their own phase names, e.g. ``rematch``, plus the
+    incremental index's ``splice``/``rank_patch`` surgery phases).
+    ``blocks_touched`` counts the blocked endpoint index's per-batch
+    block mutations (0 for non-blocked engines; DESIGN.md §13).
     """
 
     engine: str = ""
@@ -216,6 +219,7 @@ class MatchStats:
     capacity: int = 0
     retries: int = 0
     recompiles: int = 0
+    blocks_touched: int = 0
     attempts: List[int] = dataclasses.field(default_factory=list)
     phase_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
 
@@ -230,6 +234,16 @@ class MatchStats:
         i.e. ``max_pairs * 2`` int32 slots of the widest attempt)."""
         return 2 * max(self.attempts, default=self.capacity)
 
+    @property
+    def splice_us(self) -> float:
+        """Stream-surgery wall time in µs (the blocked/flat splice phase)."""
+        return self.phase_seconds.get("splice", 0.0) * 1e6
+
+    @property
+    def rank_patch_us(self) -> float:
+        """Rank-table rebuild/patch wall time in µs."""
+        return self.phase_seconds.get("rank_patch", 0.0) * 1e6
+
     def add_phase(self, name: str, seconds: float) -> None:
         self.phase_seconds[name] = self.phase_seconds.get(name, 0.0) + seconds
 
@@ -241,9 +255,12 @@ class MatchStats:
             "capacity": self.capacity,
             "retries": self.retries,
             "recompiles": self.recompiles,
+            "blocks_touched": self.blocks_touched,
             "attempts": list(self.attempts),
             "waste": self.waste,
             "peak_buffer_elements": self.peak_buffer_elements,
+            "splice_us": self.splice_us,
+            "rank_patch_us": self.rank_patch_us,
             "phase_seconds": dict(self.phase_seconds),
         }
 
@@ -406,16 +423,17 @@ class BulkRegimePolicy:
     """Thresholds of the stacked bulk rematch's three regimes.
 
     ``b·m <= dense_max_elems``: one dense numpy mask (lowest constant, no
-    sort setup — measured crossover on this container, EXPERIMENTS.md
-    §Churn).  ``b·m <= jax_max_elems``: the jitted fused mask (one
+    sort setup).  ``b·m <= jax_max_elems``: the jitted fused mask (one
     multithreaded pass, pow2-padded shapes).  Above: the output-sensitive
-    sort-based candidates path.  ``force`` pins a regime outright —
-    the audit/benchmark knob (each regime reports its name in
+    sort-based candidates path.  Defaults are the crossovers measured at
+    m=1e5 on this container (EXPERIMENTS.md §Churn): dense wins to
+    b·m ≈ 2e6, jax to ≈ 2e7, sort beyond.  ``force`` pins a regime
+    outright — the audit/benchmark knob (each regime reports its name in
     :class:`MatchStats`, so a forced run is verifiable from stats).
     """
 
-    dense_max_elems: int = 1 << 22
-    jax_max_elems: int = 1 << 23
+    dense_max_elems: int = 1 << 21
+    jax_max_elems: int = 1 << 24
     force: Optional[str] = None
 
     def __post_init__(self):

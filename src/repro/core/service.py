@@ -230,7 +230,9 @@ class DDMService:
                  delta_impl: str = "vector",
                  policy: Optional[runtime_lib.CapacityPolicy] = None,
                  regime_policy: Optional[
-                     runtime_lib.BulkRegimePolicy] = None):
+                     runtime_lib.BulkRegimePolicy] = None,
+                 index_impl: str = "blocked",
+                 block_target: Optional[int] = None):
         self.dims = dims
         self._subs = _RegionTable.create(dims, capacity)
         self._upds = _RegionTable.create(dims, capacity)
@@ -238,10 +240,15 @@ class DDMService:
         # index's bulk rematches land in the same stats() stream
         self._recorder = runtime_lib.StatsRecorder()
         self._policy = policy or runtime_lib.DEFAULT_POLICY
+        # index_impl/block_target select the endpoint-stream backend
+        # (blocked √n surgery vs legacy flat splice — DESIGN.md §13) and
+        # flow through the broker's service_kwargs untouched
         self._index = IncrementalIndex(dims=dims, capacity=capacity,
                                        delta_impl=delta_impl,
                                        regime_policy=regime_policy,
-                                       recorder=self._recorder)
+                                       recorder=self._recorder,
+                                       index_impl=index_impl,
+                                       block_target=block_target)
         # pending[(side, rid)] ∈ {"add", "move", "remove"} — composed so a
         # rid reaches the index at most once per batch
         self._pending: Dict[Tuple[str, int], str] = {}

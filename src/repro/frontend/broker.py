@@ -400,6 +400,9 @@ class BrokerSession:
                 op.ticket._fail(exc)
                 continue
             applied.append((op, result))
+        # cleared so an empty flush can't fold a previous batch's surgery
+        # stats into this record
+        self._svc._index.last_batch_stats = None
         delta = self._svc.flush()
         dt = time.perf_counter() - t0
         self._flush_seconds.append(dt)
@@ -419,6 +422,14 @@ class BrokerSession:
             count=len(applied), capacity=len(ops),
             attempts=[len(ops)])
         stats.add_phase("flush", dt)
+        # fold the index's surgery stats into the flush record so the
+        # broker surface shows blocked-index behaviour (DESIGN.md §13)
+        surgery = self._svc._index.last_batch_stats
+        if surgery is not None:
+            stats.blocks_touched = surgery.blocks_touched
+            splice = surgery.phase_seconds.get("splice")
+            if splice is not None:
+                stats.add_phase("splice", splice)
         self._record(stats)
         self._space.notify_all()
         return delta
@@ -527,6 +538,7 @@ class BrokerSession:
                 "applied": self.applied,
                 "flushes": self.flushes,
                 "flush_p50_us": _percentile(self._flush_seconds, 0.5) * 1e6,
+                "flush_p95_us": _percentile(self._flush_seconds, 0.95) * 1e6,
                 "flush_p99_us": _percentile(self._flush_seconds, 0.99) * 1e6,
                 "degraded_reads": self.degraded_reads,
                 "exact_reads": self.exact_reads,
@@ -682,6 +694,8 @@ class Broker:
                 "exact_reads")
         totals = {k: sum(int(s[k]) for s in per.values()) for k in keys}
         totals["sessions"] = len(per)
+        totals["flush_p95_us"] = max(
+            (float(s["flush_p95_us"]) for s in per.values()), default=0.0)
         totals["flush_p99_us"] = max(
             (float(s["flush_p99_us"]) for s in per.values()), default=0.0)
         out = {"sessions": per, "totals": totals,

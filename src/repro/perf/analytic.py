@@ -221,3 +221,77 @@ def model_flops_reference(cfg: ModelConfig, shape: ShapeDef) -> float:
     if shape.kind == "prefill":
         return 2.0 * n_active * tokens
     return 6.0 * n_active * tokens
+
+
+# ---------------------------------------------------------------------------
+# DDM churn-flush cost model (the blocked endpoint index, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+# Element-op counts for splicing a b-region move batch into one per-dim
+# endpoint stream of n_endpoints records, mirroring the two backends in
+# repro.core.{flatstream,blockstream} term for term.  Same philosophy as
+# the transformer models above: follow the implementation, pin the shape
+# of the curve (the flat/blocked crossover), and let the benchmark gate
+# validate it against measured churn_small_batch rows — absolute
+# constants are calibration, the crossover is structure.
+
+# whole-stream passes a flat splice pays: np.delete + np.insert over the
+# 4 parallel columns, then the 8 rank-table cumsum/scatter passes
+_FLAT_SPLICE_PASSES = 16.0
+
+
+def _churn_block_size(n_endpoints: float, block=None) -> float:
+    """The adaptive ~sqrt(n) block size the blocked backend picks."""
+    from repro.core.runtime import round_up_pow2
+    if block:
+        return float(block)
+    root = int(max(n_endpoints, 1.0) ** 0.5)
+    return float(min(max(round_up_pow2(max(root, 1)), 32), 4096))
+
+
+def churn_splice_cost(n_endpoints: float, b: float, *,
+                      impl: str = "blocked", block=None) -> float:
+    """Predicted element-ops to splice a b-region batch (2b endpoints).
+
+    ``flat``:    O(n) — every whole-stream pass touches all n endpoints,
+                 plus the delta's own O(b log b) sort.
+    ``blocked``: O(b·log n + touched·B) — directory routing per delta
+                 endpoint plus per-owning-block merges; falls back to
+                 the flat rebuild once the delta spans every block
+                 (2b >= n/B), which is exactly what the implementation
+                 does.
+    """
+    import math
+    n = max(float(n_endpoints), 2.0)
+    d = 2.0 * max(float(b), 0.0)            # delta endpoints
+    delta_sort = d * max(math.log2(max(d, 2.0)), 1.0)
+    if impl == "flat":
+        return _FLAT_SPLICE_PASSES * n + delta_sort
+    if impl != "blocked":
+        from repro.core.errors import ValidationError
+        raise ValidationError(
+            f"impl must be 'flat' or 'blocked', got {impl!r}")
+    bsz = _churn_block_size(n, block)
+    nb = max(n / bsz, 1.0)
+    if d >= nb:                             # bulk fallback: flat merge+rechunk
+        return _FLAT_SPLICE_PASSES * n + delta_sort
+    touched = min(2.0 * d, nb)              # <=2 owning blocks per endpoint
+    return d * math.log2(n) + touched * bsz + delta_sort
+
+
+def churn_flush_crossover(n_endpoints: float, block=None) -> float:
+    """Largest batch size b for which the model says the blocked splice
+    beats the flat one — the measured speedup rows must straddle it:
+    single-region moves land far below (blocked wins), whole-stream
+    rewrites far above (the bulk fallback makes the two equal)."""
+    lo, hi = 1.0, max(float(n_endpoints), 2.0)
+    if churn_splice_cost(n_endpoints, lo, block=block) >= \
+            churn_splice_cost(n_endpoints, lo, impl="flat"):
+        return 0.0
+    while hi - lo > 1.0:
+        mid = (lo + hi) / 2.0
+        if churn_splice_cost(n_endpoints, mid, block=block) < \
+                churn_splice_cost(n_endpoints, mid, impl="flat"):
+            lo = mid
+        else:
+            hi = mid
+    return lo

@@ -221,12 +221,12 @@ def _bitmatrix_pallas_pairs(subs, upds):
             s, u, max_pairs=max_pairs, block_n=128), subs, upds)
 
 
-def _incremental_pairs(subs, upds):
-    """Fresh IncrementalIndex, one bulk add batch, all_pairs()."""
+def _incremental_pairs_impl(subs, upds, index_impl, block_target=None):
+    s_lo, s_hi, u_lo, u_hi, d = _np_sides(subs, upds)
     from repro.core import IncrementalIndex
 
-    s_lo, s_hi, u_lo, u_hi, d = _np_sides(subs, upds)
-    idx = IncrementalIndex(dims=d, capacity=4)   # growth exercised every call
+    idx = IncrementalIndex(dims=d, capacity=4,   # growth exercised every call
+                           index_impl=index_impl, block_target=block_target)
     adds = {}
     if s_lo.shape[0]:
         adds["sub"] = (np.arange(s_lo.shape[0], dtype=np.int64), s_lo, s_hi)
@@ -235,6 +235,18 @@ def _incremental_pairs(subs, upds):
     if adds:
         idx.apply_batch_arrays(adds=adds, want_delta=False)
     return idx.all_pairs()
+
+
+def _incremental_pairs(subs, upds):
+    """Fresh IncrementalIndex on the legacy flat splice path, one bulk add
+    batch, all_pairs() — the conformance twin of incremental_blocked."""
+    return _incremental_pairs_impl(subs, upds, "flat")
+
+
+def _incremental_blocked_pairs(subs, upds):
+    """The blocked endpoint index (DESIGN.md §13) with a tiny pinned block
+    size so every corpus case exercises directory routing + split/merge."""
+    return _incremental_pairs_impl(subs, upds, "blocked", block_target=8)
 
 
 def _service_pairs(subs, upds):
@@ -280,6 +292,8 @@ def _ensure_builtin() -> None:
     register(MatchEngine("bitmatrix_pallas", _bitmatrix_pallas_pairs))
     register(MatchEngine("incremental_index", _incremental_pairs,
                          stateful=True))
+    register(MatchEngine("incremental_blocked", _incremental_blocked_pairs,
+                         stateful=True))
     register(MatchEngine("ddm_service", _service_pairs, stateful=True))
     register(MatchEngine("api_facade", _facade_pairs, stateful=True))
 
@@ -288,25 +302,33 @@ def _ensure_builtin() -> None:
 # churn runners: one script, every delta implementation, plus the rebuild
 # ---------------------------------------------------------------------------
 
-CHURN_IMPLS = ("loop", "vector", "arrays")
+CHURN_IMPLS = ("loop", "vector", "arrays", "blocked")
 
 
 class _IndexChurnRunner:
     """Drives tuple-format churn batches through one IncrementalIndex
-    surface.  ``impl='arrays'`` converts each batch to the side-grouped
-    array API (the vectorized bulk path); 'loop'/'vector' use the tuple
-    API with the corresponding ``delta_impl``."""
+    surface.  ``impl='arrays'``/``'blocked'`` convert each batch to the
+    side-grouped array API (the vectorized bulk path); 'loop'/'vector'
+    use the tuple API with the corresponding ``delta_impl``.  The stream
+    backend varies across impls — 'loop'/'vector' run the legacy flat
+    splice, 'arrays' the default blocked index, 'blocked' a tiny pinned
+    block size (forced split/merge churn) — so every churn script
+    twin-runs flat against blocked batch-for-batch (DESIGN.md §13)."""
 
     def __init__(self, impl: str, dims: int):
         from repro.core import IncrementalIndex
 
         self.impl = impl
         delta_impl = "loop" if impl == "loop" else "vector"
+        index_impl = "flat" if impl in ("loop", "vector") else "blocked"
+        block_target = 8 if impl == "blocked" else None
         self.idx = IncrementalIndex(dims=dims, capacity=4,
-                                    delta_impl=delta_impl)
+                                    delta_impl=delta_impl,
+                                    index_impl=index_impl,
+                                    block_target=block_target)
 
     def apply(self, adds, moves, removes):
-        if self.impl != "arrays":
+        if self.impl not in ("arrays", "blocked"):
             return self.idx.apply_batch(adds=adds, moves=moves,
                                         removes=removes)
         grp_a, grp_m, grp_r = {}, {}, {}

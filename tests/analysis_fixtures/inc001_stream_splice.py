@@ -1,0 +1,32 @@
+"""Seeded INC001 violations: full-stream splice/sort on incremental-index
+state outside the stream-backend homes (core/flatstream.py and
+core/blockstream.py own all whole-stream surgery)."""
+import numpy as np
+
+
+def bad_insert(idx, d, pos, vals):
+    return np.insert(idx._values[d], pos, vals)        # EXPECT: INC001
+
+
+def bad_delete(idx, d, keep):
+    return np.delete(idx._is_upper[d], keep)           # EXPECT: INC001
+
+
+def bad_full_resort(idx, d):
+    return np.argsort(idx._values[d], kind="stable")   # EXPECT: INC001
+
+
+def bad_lexsort(idx, d):
+    order = np.lexsort((idx._is_upper[d], idx._values[d]))  # EXPECT: INC001
+    return order
+
+
+def ok_delta_sort(vals, up):
+    # delta-local endpoints: sorting the batch's own 2b records is the
+    # O(b log b) the design calls for — no stream state referenced
+    return np.lexsort((up, vals))
+
+
+def ok_unrelated_delete(table, rows):
+    # np.delete over non-index state is out of scope
+    return np.delete(table, rows, axis=0)

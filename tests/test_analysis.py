@@ -43,6 +43,7 @@ def _lines(findings, rule_id):
     ("lock002_lock_cycle.py", "LOCK002", 1),
     ("api001_bare_raise.py", "API001", 2),
     ("api002_shim_import.py", "API002", 2),
+    ("inc001_stream_splice.py", "INC001", 4),
 ])
 def test_rule_catches_seeded_fixture(fixture, rule_id, count):
     found = _findings(fixture)
@@ -160,7 +161,8 @@ def test_baseline_suppression_is_line_number_free():
 def test_registry_has_all_builtin_rules():
     have = set(rules.all_rules())
     assert have == {"JAX001", "JAX002", "JAX003", "JAX004",
-                    "LOCK001", "LOCK002", "API001", "API002", "REPO001"}
+                    "LOCK001", "LOCK002", "API001", "API002", "REPO001",
+                    "INC001"}
 
 
 def test_registry_rejects_duplicates_and_bad_rules():

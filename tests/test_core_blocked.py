@@ -1,0 +1,343 @@
+"""Tests for the blocked endpoint index (DESIGN.md §13).
+
+Boundary-condition churn scripts forcing every structural transition —
+fill-to-overflow splits, drain-to-underflow merges, tombstone-heavy move
+storms — each twin-run flat vs blocked and asserted identical batch for
+batch; plus the per-block rank-table cache, the surgery stats plumbing
+(``splice_us``/``rank_patch_us``/``blocks_touched``), and the
+``index_impl``/``block_target`` selection contract.  Property churn runs
+under hypothesis when installed; the seeded scripts keep the same
+invariants covered on a bare environment.
+"""
+import numpy as np
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import DDMService, IncrementalIndex
+from repro.core.blockstream import BLOCK_MIN, BlockedEndpointStream
+from repro.core.errors import ValidationError
+from repro.core.flatstream import FlatEndpointStream
+from repro.testing.conformance import CHURN_IMPLS, check_churn_script
+
+
+def _interval(rng, span=100.0, seg=8.0):
+    lo = float(rng.uniform(0, span))
+    return lo, lo + float(rng.uniform(0.5, seg))
+
+
+def _twin_indexes(block_target=4):
+    return (IncrementalIndex(dims=1, capacity=4, index_impl="flat"),
+            IncrementalIndex(dims=1, capacity=4, index_impl="blocked",
+                             block_target=block_target))
+
+
+def _assert_twins_agree(flat, blocked, context=""):
+    fv, fu, fs, fo = flat.stream(0)
+    bv, bu, bs, bo = blocked.stream(0)
+    np.testing.assert_array_equal(fv, bv, err_msg=context)
+    np.testing.assert_array_equal(fu, bu, err_msg=context)
+    np.testing.assert_array_equal(fs, bs, err_msg=context)
+    np.testing.assert_array_equal(fo, bo, err_msg=context)
+    assert flat.all_pairs() == blocked.all_pairs(), context
+    for stream in blocked._streams:
+        stream.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# forced structural transitions, flat == blocked after every batch
+# ---------------------------------------------------------------------------
+
+def test_fill_to_overflow_splits_blocks():
+    """Monotone fill: every B-th insert overflows a block and splits it."""
+    flat, blocked = _twin_indexes(block_target=4)
+    rng = np.random.RandomState(0)
+    for rid in range(40):
+        lo, hi = _interval(rng)
+        df = flat.apply_batch(adds=[("sub" if rid % 2 else "upd",
+                                     rid, lo, hi)])
+        db = blocked.apply_batch(adds=[("sub" if rid % 2 else "upd",
+                                        rid, lo, hi)])
+        assert df == db, rid
+        _assert_twins_agree(flat, blocked, f"after add {rid}")
+    stream = blocked._streams[0]
+    # 80 endpoints at B=4: the 2B split bound forces many blocks
+    assert stream.n_blocks >= 80 // 8
+    assert max(stream.block_sizes()) <= 2 * 4
+
+
+def test_drain_to_underflow_merges_blocks():
+    """Remove nearly everything: undersized neighbours must merge away."""
+    flat, blocked = _twin_indexes(block_target=4)
+    rng = np.random.RandomState(1)
+    regions = []
+    for rid in range(32):
+        side = "sub" if rid % 2 else "upd"
+        lo, hi = _interval(rng)
+        regions.append((side, rid))
+        for idx in (flat, blocked):
+            idx.apply_batch(adds=[(side, rid, lo, hi)])
+    peak_blocks = blocked._streams[0].n_blocks
+    assert peak_blocks > 1
+    rng.shuffle(regions)
+    while len(regions) > 2:
+        batch, regions = regions[:3], regions[3:]
+        df = flat.apply_batch(removes=batch)
+        db = blocked.apply_batch(removes=batch)
+        assert df == db
+        _assert_twins_agree(flat, blocked,
+                            f"after draining to {len(regions)}")
+    assert blocked._streams[0].n_blocks < peak_blocks
+
+
+def test_tombstone_heavy_move_storm():
+    """Move the same few regions over and over — delete+insert surgery
+    concentrated in a handful of blocks must never corrupt ordering."""
+    flat, blocked = _twin_indexes(block_target=4)
+    rng = np.random.RandomState(2)
+    for rid in range(24):
+        side = "sub" if rid % 2 else "upd"
+        lo, hi = _interval(rng)
+        for idx in (flat, blocked):
+            idx.apply_batch(adds=[(side, rid, lo, hi)])
+    hot = [("sub", 1), ("sub", 3), ("upd", 0), ("upd", 2)]
+    for step in range(25):
+        moves = []
+        for side, rid in hot:
+            lo, hi = _interval(rng)
+            moves.append((side, rid, lo, hi))
+        df = flat.apply_batch(moves=moves)
+        db = blocked.apply_batch(moves=moves)
+        assert df == db, step
+        _assert_twins_agree(flat, blocked, f"storm step {step}")
+
+
+def test_equal_value_ties_route_identically():
+    """Coincident endpoints: the lowers-before-uppers tie-break must
+    survive blocked routing (lower side='left', upper side='right')."""
+    flat, blocked = _twin_indexes(block_target=2)
+    batches = [
+        [("sub", 0, 5.0, 5.0)], [("upd", 1, 5.0, 5.0)],
+        [("sub", 2, 5.0, 10.0)], [("upd", 3, 0.0, 5.0)],
+        [("sub", 4, 0.0, 10.0)], [("upd", 5, 5.0, 7.0)],
+    ]
+    for i, adds in enumerate(batches):
+        df = flat.apply_batch(adds=adds)
+        db = blocked.apply_batch(adds=adds)
+        assert df == db, i
+        _assert_twins_agree(flat, blocked, f"tie batch {i}")
+
+
+def _seeded_script(seed, steps=12, pool=20):
+    """Mixed adds/moves/removes churn script in check_churn_script format."""
+    rng = np.random.RandomState(seed)
+    live = {"sub": set(), "upd": set()}
+    next_rid = {"sub": 0, "upd": 0}
+    script = []
+    for _ in range(steps):
+        adds, moves, removes = [], [], []
+        for side in ("sub", "upd"):
+            while len(live[side]) < 3 or (len(live[side]) < pool
+                                          and rng.rand() < 0.5):
+                rid = next_rid[side]
+                next_rid[side] += 1
+                lo, hi = _interval(rng)
+                adds.append((side, rid, lo, hi))
+                live[side].add(rid)
+            movable = sorted(live[side] - {r for _, r, _, _ in adds})
+            rng.shuffle(movable)
+            for rid in movable[:rng.randint(0, 4)]:
+                lo, hi = _interval(rng)
+                moves.append((side, rid, lo, hi))
+            moved = {r for _, r, _, _ in moves}
+            removable = sorted(live[side] - moved
+                               - {r for _, r, _, _ in adds})
+            rng.shuffle(removable)
+            for rid in removable[:rng.randint(0, 3)]:
+                removes.append((side, rid))
+                live[side].discard(rid)
+        script.append((adds, moves, removes))
+    return script
+
+
+@pytest.mark.parametrize("seed", [3, 7, 11, 19])
+def test_seeded_churn_scripts_conform_across_impls(seed):
+    """Every churn impl (flat loop/vector, blocked default, blocked with a
+    tiny pinned B) agrees batch for batch on randomized mixed churn."""
+    problems = check_churn_script(_seeded_script(seed), dims=1)
+    assert problems == [], problems
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_property_churn_scripts_conform():
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def _prop(seed):
+        problems = check_churn_script(_seeded_script(seed, steps=8),
+                                      dims=1)
+        assert problems == [], problems
+    _prop()
+
+
+def test_churn_impl_registry_includes_blocked():
+    assert "blocked" in CHURN_IMPLS and "arrays" in CHURN_IMPLS
+
+
+# ---------------------------------------------------------------------------
+# the per-block rank-table cache
+# ---------------------------------------------------------------------------
+
+def test_rank_patch_touches_only_dirty_blocks():
+    idx = IncrementalIndex(dims=1, capacity=4, index_impl="blocked",
+                           block_target=4)
+    rng = np.random.RandomState(5)
+    for rid in range(40):
+        side = "sub" if rid % 2 else "upd"
+        lo, hi = _interval(rng)
+        idx.apply_batch(adds=[(side, rid, lo, hi)])
+    idx.all_pairs()                        # tables built: all blocks clean
+    n_blocks = idx._streams[0].n_blocks
+    assert n_blocks > 3
+    lo, hi = 1.0, 2.0
+    idx.apply_batch(moves=[("upd", 0, lo, hi)])
+    idx.all_pairs()                        # rebuild only dirty blocks
+    prep_records = [s for s in idx.recorder.history()
+                    if s.engine == "incremental_prep"]
+    assert prep_records, "no rank_patch record after all_pairs"
+    last = prep_records[-1]
+    # one region = 2 endpoints, <=2 owning blocks each for delete+insert
+    assert 0 < last.blocks_touched <= 4
+    assert last.blocks_touched < n_blocks
+    assert last.rank_patch_us >= 0.0
+
+
+def test_rank_tables_cached_between_queries():
+    idx = IncrementalIndex(dims=1, capacity=4, index_impl="blocked",
+                           block_target=4)
+    rng = np.random.RandomState(6)
+    for rid in range(16):
+        idx.apply_batch(adds=[("sub" if rid % 2 else "upd", rid,
+                               *_interval(rng))])
+    idx.all_pairs()
+    n_prep = sum(1 for s in idx.recorder.history()
+                 if s.engine == "incremental_prep")
+    idx.all_pairs()                        # no batch between: cached prep
+    n_prep2 = sum(1 for s in idx.recorder.history()
+                  if s.engine == "incremental_prep")
+    assert n_prep2 == n_prep
+
+
+# ---------------------------------------------------------------------------
+# surgery stats plumbing
+# ---------------------------------------------------------------------------
+
+def test_splice_stats_recorded_per_batch():
+    idx = IncrementalIndex(dims=1, capacity=4, index_impl="blocked",
+                           block_target=4)
+    rng = np.random.RandomState(7)
+    for rid in range(10):
+        idx.apply_batch(adds=[("sub" if rid % 2 else "upd", rid,
+                               *_interval(rng))])
+    idx.apply_batch(moves=[("upd", 0, 1.0, 2.0)])
+    stats = idx.last_batch_stats
+    assert stats is not None
+    assert stats.engine == "incremental_splice"
+    assert stats.regime == "blocked"
+    assert stats.blocks_touched > 0
+    assert stats.splice_us > 0.0
+    d = stats.as_dict()
+    assert d["blocks_touched"] == stats.blocks_touched
+    assert "splice_us" in d and "rank_patch_us" in d
+
+
+def test_broker_flush_folds_surgery_stats():
+    from repro.frontend.broker import Broker
+    with Broker() as broker:
+        sess = broker.create_session("t", dims=1, capacity=8)
+        t_s = sess.register("sub", 0.0, 10.0)
+        t_u = sess.register("upd", 5.0, 15.0)
+        sess.flush()                       # tickets resolve at the flush
+        rid_s = t_s.result(timeout=5.0)
+        rid_u = t_u.result(timeout=5.0)
+        assert rid_s is not None and rid_u is not None
+        sess.move("upd", rid_u, 2.0, 8.0)
+        sess.flush()
+        st_ = sess.stats()
+        assert st_["flushes"] >= 2
+        assert "flush_p95_us" in st_
+        assert st_["flush_p50_us"] <= st_["flush_p95_us"] \
+            <= st_["flush_p99_us"]
+        totals = broker.stats()["totals"]
+        assert totals["flush_p95_us"] >= 0.0
+        flush_records = [s for s in sess._recorder.history()
+                         if s.engine == "frontend_flush"]
+        moved = [s for s in flush_records if "splice" in s.phase_seconds]
+        assert moved, "surgery stats never folded into a flush record"
+        assert moved[-1].blocks_touched > 0
+
+
+def test_empty_flush_does_not_leak_previous_surgery_stats():
+    from repro.frontend.broker import Broker
+    with Broker() as broker:
+        sess = broker.create_session("t", dims=1, capacity=8)
+        sess.register("sub", 0.0, 10.0)
+        sess.register("upd", 5.0, 15.0)
+        sess.flush()                       # batch with surgery
+        sess.flush()                       # empty queue: no surgery
+        empty = [s for s in sess._recorder.history()
+                 if s.engine == "frontend_flush"][-1]
+        assert "splice" not in empty.phase_seconds
+        assert empty.blocks_touched == 0
+
+
+# ---------------------------------------------------------------------------
+# impl selection + validation
+# ---------------------------------------------------------------------------
+
+def test_index_impl_validation():
+    with pytest.raises(ValidationError, match="index_impl"):
+        IncrementalIndex(index_impl="hashed")
+    with pytest.raises(ValidationError, match="block_target"):
+        BlockedEndpointStream(block_target=1)
+
+
+def test_index_impl_selects_stream_backend():
+    flat = IncrementalIndex(index_impl="flat")
+    blocked = IncrementalIndex(index_impl="blocked")
+    assert isinstance(flat._streams[0], FlatEndpointStream)
+    assert isinstance(blocked._streams[0], BlockedEndpointStream)
+    assert flat._streams[0].impl == "flat"
+    assert blocked._streams[0].impl == "blocked"
+
+
+def test_block_target_pins_block_size():
+    idx = IncrementalIndex(dims=1, capacity=4, index_impl="blocked",
+                           block_target=4)
+    rng = np.random.RandomState(8)
+    for rid in range(64):
+        idx.apply_batch(adds=[("sub" if rid % 2 else "upd", rid,
+                               *_interval(rng))])
+    stream = idx._streams[0]
+    assert stream._target == 4             # pinned, not adapted
+    assert max(stream.block_sizes()) <= 8  # 2B split bound
+
+
+def test_adaptive_block_target_tracks_sqrt_n():
+    idx = IncrementalIndex(dims=1, capacity=4, index_impl="blocked")
+    rng = np.random.RandomState(9)
+    adds = {"sub": (np.arange(3000, dtype=np.int64),
+                    *(lambda lo: (lo, lo + 1.0))(
+                        rng.uniform(0, 100, 3000).astype(np.float32)))}
+    idx.apply_batch_arrays(adds=adds)
+    stream = idx._streams[0]
+    assert stream._target >= BLOCK_MIN
+    # 6000 endpoints: B adapts to the pow2 round-up of ~sqrt via the
+    # shared runtime ladder — must be far below the endpoint count
+    assert stream._target <= 256
+
+
+def test_service_exposes_index_impl():
+    svc = DDMService(dims=1, capacity=8, index_impl="flat")
+    assert svc._index.index_impl == "flat"
+    svc2 = DDMService(dims=1, capacity=8, block_target=8)
+    assert svc2._index.index_impl == "blocked"
+    assert svc2._index._streams[0]._fixed_target == 8
